@@ -1,0 +1,56 @@
+"""Benchmark harness: one module per paper table/figure + systems benches.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick]
+
+Prints ``name,...`` CSV lines per benchmark (format per module docstrings).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv
+    from benchmarks import construction, convergence, sampling_throughput, serving_diversity, table1
+
+    sections = [
+        ("Table 1 (load counts)", table1.main),
+        ("Figs 7/9/1 (QMC convergence & discrepancy)",
+         (lambda: _convergence_quick()) if quick else convergence.main),
+        ("Construction throughput", construction.main),
+        ("Sampling throughput", sampling_throughput.main),
+        ("Serving best-of-n diversity", serving_diversity.main),
+    ]
+    for title, fn in sections:
+        t0 = time.time()
+        print(f"# === {title} ===", flush=True)
+        for line in fn():
+            print(line, flush=True)
+        print(f"# ({time.time() - t0:.1f}s)", flush=True)
+
+
+def _convergence_quick():
+    from benchmarks import convergence
+
+    out = []
+    for n, e_inv, e_ali in convergence.run_1d(max_log2=14):
+        out.append(
+            f"fig7_1d,n={n},err_inverse={e_inv:.3e},err_alias={e_ali:.3e},"
+            f"ratio={e_ali / max(e_inv, 1e-30):.2f}"
+        )
+    for n, e_inv, e_ali in convergence.run_2d(max_log2=14, h=64, w=128):
+        out.append(
+            f"fig9_2d,n={n},err_inverse={e_inv:.3e},err_alias={e_ali:.3e},"
+            f"ratio={e_ali / max(e_inv, 1e-30):.2f}"
+        )
+    d = convergence.run_discrepancy(2048)
+    out.append(
+        f"fig1_discrepancy,input={d['input']:.4f},inverse={d['inverse']:.4f},"
+        f"alias={d['alias']:.4f}"
+    )
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Sampling throughput (us/call over batches): forest traversal vs binary
+search vs cutpoint+binary vs alias, in both pure-XLA and Pallas-interpret
+forms. The paper's Table-1 'average_32' models exactly the vector-lane
+lock-step this batch timing measures on real hardware.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    build_alias,
+    build_forest,
+    sample_alias,
+    sample_binary,
+    sample_cutpoint_binary,
+    sample_forest,
+)
+from repro.core.cdf import normalize_weights
+from repro.kernels import ops
+
+
+def _time(fn, reps: int = 10) -> float:
+    jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(n: int = 1 << 16, m: int | None = None, batch: int = 1 << 16):
+    m = m or n
+    rng = np.random.default_rng(0)
+    w = normalize_weights(rng.random(n) ** 12 + 1e-12)
+    f = build_forest(jnp.asarray(w), m)
+    at = build_alias(w)
+    xi = jnp.asarray(rng.random(batch), jnp.float32)
+
+    sb = jax.jit(lambda u: sample_binary(f.cdf, u))
+    scb = jax.jit(lambda u: sample_cutpoint_binary(f.cdf, f.cell_first, u))
+    sf = jax.jit(lambda u: sample_forest(f, u))
+    sa = jax.jit(lambda u: sample_alias(at, u))
+
+    rows = [
+        ("binary_search", _time(lambda: sb(xi))),
+        ("cutpoint_binary", _time(lambda: scb(xi))),
+        ("forest_alg2", _time(lambda: sf(xi))),
+        ("alias", _time(lambda: sa(xi))),
+        ("forest_pallas_interpret",
+         _time(lambda: ops.forest_sample(f, xi), reps=3)),
+    ]
+    return [(name, us, batch / us) for name, us in rows]
+
+
+def main() -> list[str]:
+    return [
+        f"throughput,{name},us_per_call={us:.0f},Msamples_s={mps:.2f}"
+        for name, us, mps in run()
+    ]
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -1,0 +1,63 @@
+"""Paper Table 1: memory-load counts (maximum / average / average_32) for
+Cutpoint+binary-search vs Cutpoint+radix-forest on the four distributions
+of Fig. 12. n, m are not stated in the paper; defaults n=256, m=256
+reproduce the magnitudes (see EXPERIMENTS.md §Paper for the comparison).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.configs.paper_workloads import TABLE1
+from repro.core import (
+    build_forest,
+    np_sample_cutpoint_binary_counting,
+    np_sample_forest_counting,
+    table1_row,
+)
+
+
+def run(n: int = 256, m: int = 256, n_samples: int = 1 << 16, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    xi = rng.random(n_samples).astype(np.float32)
+    rows = []
+    for name, make in TABLE1.items():
+        w = make(n)
+        f = build_forest(jnp.asarray(w), m)
+        cdf = np.asarray(f.cdf)
+        cell_first = np.asarray(f.cell_first)
+        table = np.asarray(f.table)
+        i_b, loads_b = np_sample_cutpoint_binary_counting(cdf, cell_first, table, xi)
+        i_f, loads_f = np_sample_forest_counting(f, xi)
+        assert np.all(cdf[i_b] == cdf[i_f]), name
+        rows.append((name, "cutpoint+binary", table1_row(loads_b)))
+        rows.append((name, "cutpoint+radix_forest", table1_row(loads_f)))
+    return rows
+
+
+PAPER = {  # the paper's reported numbers for side-by-side context
+    ("i^20", "cutpoint+binary"): (8, 1.25, 3.66),
+    ("i^20", "cutpoint+radix_forest"): (16, 1.23, 3.46),
+    ("(i mod 32 + 1)^25", "cutpoint+binary"): (6, 1.30, 4.62),
+    ("(i mod 32 + 1)^25", "cutpoint+radix_forest"): (13, 1.22, 3.72),
+    ("(i mod 64 + 1)^35", "cutpoint+binary"): (7, 1.19, 4.33),
+    ("(i mod 64 + 1)^35", "cutpoint+radix_forest"): (13, 1.11, 2.46),
+    ("4 spikes", "cutpoint+binary"): (4, 1.60, 3.98),
+    ("4 spikes", "cutpoint+radix_forest"): (5, 1.67, 4.93),
+}
+
+
+def main() -> list[str]:
+    out = []
+    for name, method, row in run():
+        p = PAPER.get((name, method))
+        paper_s = f" | paper: max={p[0]} avg={p[1]:.2f} avg32={p[2]:.2f}" if p else ""
+        out.append(
+            f"table1,{name},{method},max={row['maximum']},"
+            f"avg={row['average']:.2f},avg32={row['average_32']:.2f}{paper_s}"
+        )
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

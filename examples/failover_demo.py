@@ -1,0 +1,44 @@
+"""Fault-tolerance demo: train, crash at a chosen step, resume, verify the
+resumed trajectory is bitwise identical to an uninterrupted run.
+
+  PYTHONPATH=src python examples/failover_demo.py
+"""
+import dataclasses
+import shutil
+
+import jax
+import numpy as np
+
+import repro.configs as C
+from repro.train import TrainConfig, Trainer
+
+cfg = dataclasses.replace(
+    C.get_reduced("granite_3_8b"), dtype="float32", n_layers=2,
+    d_model=96, n_heads=4, n_kv_heads=2, head_dim=24, d_ff=192, vocab=512,
+)
+
+def tc(path):
+    return TrainConfig(steps=20, global_batch=4, seq_len=32,
+                       ckpt_dir=path, ckpt_every=6, log_every=5)
+
+shutil.rmtree("checkpoints/failover_a", ignore_errors=True)
+shutil.rmtree("checkpoints/failover_b", ignore_errors=True)
+
+print("== reference run (no failure) ==")
+ref = Trainer(cfg, tc("checkpoints/failover_a")).run()
+
+print("== run with injected failure at step 13 ==")
+try:
+    Trainer(cfg, tc("checkpoints/failover_b"), fail_at_step=13).run()
+except RuntimeError as e:
+    print(f"CRASH: {e}")
+
+print("== resume (auto-detects latest checkpoint) ==")
+resumed = Trainer(cfg, tc("checkpoints/failover_b")).run()
+
+same = all(
+    np.array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(ref["params"]), jax.tree.leaves(resumed["params"]))
+)
+print(f"bitwise identical to uninterrupted run: {same}")
+assert same

@@ -1,0 +1,56 @@
+"""Architecture registry: the 10 assigned configs + paper-native workloads.
+
+Every module defines ``CONFIG`` (full scale, dry-run only) and the registry
+offers ``get(name)`` / ``get_reduced(name)`` (CPU smoke scale).
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import ModelConfig, reduced
+
+ARCHS = [
+    "jamba_1_5_large_398b",
+    "llama4_maverick_400b_a17b",
+    "kimi_k2_1t_a32b",
+    "whisper_small",
+    "internvl2_76b",
+    "xlstm_1_3b",
+    "qwen1_5_0_5b",
+    "stablelm_3b",
+    "qwen3_4b",
+    "granite_3_8b",
+]
+
+_ALIAS = {
+    "jamba-1.5-large-398b": "jamba_1_5_large_398b",
+    "llama4-maverick-400b-a17b": "llama4_maverick_400b_a17b",
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+    "whisper-small": "whisper_small",
+    "internvl2-76b": "internvl2_76b",
+    "xlstm-1.3b": "xlstm_1_3b",
+    "qwen1.5-0.5b": "qwen1_5_0_5b",
+    "stablelm-3b": "stablelm_3b",
+    "qwen3-4b": "qwen3_4b",
+    "granite-3-8b": "granite_3_8b",
+}
+
+
+def canonical(name: str) -> str:
+    return _ALIAS.get(name, name)
+
+
+def get(name: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{canonical(name)}")
+    return mod.CONFIG
+
+
+def get_reduced(name: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{canonical(name)}")
+    if hasattr(mod, "REDUCED"):
+        return mod.REDUCED
+    return reduced(mod.CONFIG)
+
+
+def all_configs() -> dict[str, ModelConfig]:
+    return {a: get(a) for a in ARCHS}

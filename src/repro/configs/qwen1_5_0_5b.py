@@ -1,0 +1,20 @@
+"""Qwen1.5-0.5B: dense, QKV bias, tied embeddings.
+
+24L d_model=1024 16H (MHA kv=16) d_ff=2816 vocab=151936 [hf:Qwen/Qwen1.5-0.5B].
+"""
+from repro.models.config import ModelConfig, reduced
+
+CONFIG = ModelConfig(
+    name="qwen1.5-0.5b",
+    family="dense",
+    n_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=2816,
+    vocab=151936,
+    qkv_bias=True,
+    tie_embeddings=True,
+)
+
+REDUCED = reduced(CONFIG)

@@ -1,0 +1,109 @@
+"""The Alias Method (Walker 1974/1977, Vose build) — the paper's antagonist.
+
+O(1) worst-case sampling, but the mapping is **non-monotone** (paper Fig. 6):
+warping a low-discrepancy sequence through it destroys uniformity (Figs. 1,
+7-9). The build is inherently serial (two work-list passes), in contrast to
+the parallel prefix-sum + forest build — the paper's Sec. 2.6 point; we keep
+the build in numpy on host and ship the tables to device.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class AliasTable(NamedTuple):
+    q: jax.Array      # (n,) f32 split point within each cell
+    alias: jax.Array  # (n,) i32 second interval of each cell
+
+
+def build_alias(weights: np.ndarray) -> AliasTable:
+    """Vose's O(n) stable build (serial, as the paper notes)."""
+    w = np.asarray(weights, np.float64)
+    n = len(w)
+    p = w / w.sum() * n
+    q = np.ones(n, np.float64)
+    alias = np.arange(n, dtype=np.int64)
+    small = [i for i in range(n) if p[i] < 1.0]
+    large = [i for i in range(n) if p[i] >= 1.0]
+    while small and large:
+        s, l = small.pop(), large.pop()
+        q[s] = p[s]
+        alias[s] = l
+        p[l] = (p[l] + p[s]) - 1.0
+        (small if p[l] < 1.0 else large).append(l)
+    for rest in (small, large):
+        while rest:
+            q[rest.pop()] = 1.0
+    return AliasTable(jnp.asarray(q, jnp.float32), jnp.asarray(alias, jnp.int32))
+
+
+def build_alias_parallel(weights) -> AliasTable:
+    """Data-parallel alias construction (beyond-paper: the paper notes that
+    known alias builds are serial — this one is prefix sums + two
+    searchsorteds, O(n log n) work, O(log n) depth, fully vectorizable).
+
+    Geometric formulation: scale to np_i = n*p_i; lights (np<1) demand
+    deficits on a tape (prefix D), heavies supply surpluses (prefix S).
+      * light j:  q = np_j, alias = heavy whose supply interval contains the
+        START of j's demand interval (D_{j-1});
+      * heavy k:  its supply ends at S_k inside some light j(k)'s demand
+        interval -> the heavy goes into debt d = D_{j(k)} - S_k, which the
+        NEXT heavy covers: q = 1 - d, alias = h_{k+1}; past the last light
+        boundary q = 1.
+    Validity is a telescoping mass argument (each item ends with exactly
+    np_i across its own cell + cells aliasing it), property-tested exactly
+    in tests; the pairing differs from Vose's FIFO but any valid table gives
+    identical marginals. The mapping remains non-monotone — this accelerates
+    the paper's *baseline*, not its monotone sampler.
+    """
+    w = np.asarray(weights, np.float64)
+    n = len(w)
+    npi = w / w.sum() * n
+    light = npi < 1.0
+    lights = np.where(light)[0]
+    heavies = np.where(~light)[0]
+    q = np.ones(n, np.float64)
+    alias = np.arange(n, dtype=np.int64)
+    if len(lights) and len(heavies):
+        D = np.cumsum(1.0 - npi[lights])          # demand prefix
+        S = np.cumsum(npi[heavies] - 1.0)         # supply prefix
+        total = min(D[-1], S[-1])                 # equal up to rounding
+        # lights: alias = heavy covering the demand start
+        starts = np.concatenate([[0.0], D[:-1]])
+        k = np.clip(np.searchsorted(S, starts, side="right"), 0, len(heavies) - 1)
+        q[lights] = npi[lights]
+        alias[lights] = heavies[k]
+        # heavies: debt to the next heavy where supply ends mid-demand
+        x = S  # supply end per heavy
+        j = np.searchsorted(D, x, side="left")    # light whose interval has x
+        inside = (j < len(D)) & (x < total)
+        Dj = D[np.clip(j, 0, len(D) - 1)]
+        debt = np.where(inside, Dj - x, 0.0)
+        debt = np.clip(debt, 0.0, 1.0)
+        nxt = np.minimum(np.arange(len(heavies)) + 1, len(heavies) - 1)
+        q[heavies] = 1.0 - debt
+        alias[heavies] = np.where(
+            debt > 0, heavies[nxt], heavies
+        )
+    return AliasTable(jnp.asarray(q, jnp.float32), jnp.asarray(alias, jnp.int32))
+
+
+def sample_alias(t: AliasTable, xi: jax.Array) -> jax.Array:
+    """One load of (q, alias) + one comparison; non-monotone in xi."""
+    n = t.q.shape[0]
+    scaled = xi * jnp.float32(n)
+    cell = jnp.clip(scaled.astype(jnp.int32), 0, n - 1)
+    frac = scaled - cell.astype(jnp.float32)
+    return jnp.where(frac < t.q[cell], cell, t.alias[cell]).astype(jnp.int32)
+
+
+def np_sample_alias(q: np.ndarray, alias: np.ndarray, xi: np.ndarray) -> np.ndarray:
+    n = len(q)
+    scaled = np.asarray(xi, np.float64) * n
+    cell = np.clip(scaled.astype(np.int64), 0, n - 1)
+    frac = scaled - cell
+    return np.where(frac < q[cell], cell, alias[cell])

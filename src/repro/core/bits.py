@@ -1,0 +1,62 @@
+"""Float bit-pattern utilities underlying radix-tree distance computations.
+
+The paper's key trick (Binder & Keller 2019, Sec. 3.1): for IEEE-754 floats in
+``[0, 1)`` the total order of values equals the total order of their bit
+patterns interpreted as unsigned integers, so the bitwise XOR of two patterns
+has its most significant set bit at the *level* of the implicit radix tree
+(recursive bisection of ``[0,1)``) at which the two values part ways.
+Comparing XOR values as unsigned ints therefore compares tree distances.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Sentinel distance used where the paper requires "maximum distance":
+#  * across guide-table cell boundaries (forest partition boundaries), and
+#  * outside the global data range.
+# Any XOR of two non-negative finite float32 patterns is <= 0x7fffffff, so
+# 0xffffffff is strictly larger than every real distance.
+#
+# NOTE (divergence from the paper's *pseudocode*, following its *text*):
+# Algorithm 1 sets the out-of-cell neighbor *value* to 1.0 to obtain a large
+# distance. That only majorizes in-cell distances when cell boundaries are
+# dyadic (power-of-two m). The text instead says "setting the distance ... to
+# the maximum", which is robust for any m; we implement the text.
+DIST_SENTINEL = np.uint32(0xFFFFFFFF)
+
+
+def float_to_bits(x: jax.Array) -> jax.Array:
+    """Bit pattern of float32 ``x`` as uint32."""
+    return jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+
+
+def bits_to_float(b: jax.Array) -> jax.Array:
+    return jax.lax.bitcast_convert_type(b.astype(jnp.uint32), jnp.float32)
+
+
+def xor_distance(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Radix-tree distance of two float32 values in [0, 1) (compare as uint)."""
+    return float_to_bits(a) ^ float_to_bits(b)
+
+
+def np_float_to_bits(x: np.ndarray) -> np.ndarray:
+    return np.asarray(x, np.float32).view(np.uint32)
+
+
+def np_xor_distance(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    return np_float_to_bits(a) ^ np_float_to_bits(b)
+
+
+def msb_index(x: np.ndarray) -> np.ndarray:
+    """Index of the most significant set bit (numpy, for analysis/tests)."""
+    x = np.asarray(x, np.uint32)
+    out = np.full(x.shape, -1, np.int32)
+    v = x.copy()
+    for shift in (16, 8, 4, 2, 1):
+        ge = v >= np.uint32(1 << shift)
+        out = np.where(ge, out + shift, out)
+        v = np.where(ge, v >> np.uint32(shift), v)
+    out = np.where(x > 0, out + 1, -1)  # -1 for x == 0
+    return out

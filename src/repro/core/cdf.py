@@ -1,0 +1,81 @@
+"""CDF construction: the inversion-method substrate.
+
+``build_cdf`` turns weights into the partition 0 = P_0 < P_1 < ... < P_n = 1
+(the paper's Sec. 1). On accelerators this is a parallel prefix sum — the very
+operation the paper cites as the cheap, parallel part of inversion-method
+setup (in contrast to the serial Alias-Method build). ``cdf_from_logits``
+fuses a numerically stable softmax with the scan for LM decode.
+
+The *interval lower bounds* used as radix-tree keys are ``cdf[:-1]``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_ONE_MINUS_EPS = np.float32(np.nextafter(np.float32(1.0), np.float32(0.0)))
+
+
+def normalize_weights(w: np.ndarray) -> np.ndarray:
+    """Float64 normalization for high-dynamic-range weights.
+
+    Distributions like the paper's ``p_i ~ i^20`` overflow float32 *before*
+    normalization; normalize in float64 on host first, then feed float32.
+    """
+    w = np.asarray(w, np.float64)
+    s = w.sum()
+    if not np.isfinite(s) or s <= 0:
+        raise ValueError("weights must be non-negative with a positive finite sum")
+    return (w / s).astype(np.float32)
+
+
+def build_cdf(weights: jax.Array) -> jax.Array:
+    """Normalized inclusive prefix sum with exact 0/1 endpoints.
+
+    Returns ``cdf`` of shape ``(n+1,)`` float32 with cdf[0] == 0, cdf[n] == 1.
+    Weights must be non-negative with a positive sum. Ties (zero-probability
+    intervals) are permitted; samplers then never return the empty interval
+    except on exact boundary hits (measure ~0; see tests).
+    """
+    w = jnp.asarray(weights, jnp.float32)
+    c = jnp.cumsum(w.astype(jnp.float64) if jax.config.jax_enable_x64 else w)
+    total = c[-1]
+    c = (c / total).astype(jnp.float32)
+    c = jnp.clip(c, 0.0, 1.0).at[-1].set(1.0)
+    # Enforce monotonicity under float rounding.
+    c = jax.lax.cummax(c)
+    return jnp.concatenate([jnp.zeros((1,), jnp.float32), c])
+
+
+def cdf_from_logits(logits: jax.Array, temperature: float = 1.0) -> jax.Array:
+    """Stable softmax -> CDF along the last axis; shape (..., n) -> (..., n+1)."""
+    x = (logits / temperature).astype(jnp.float32)
+    x = x - jax.lax.stop_gradient(jnp.max(x, axis=-1, keepdims=True))
+    e = jnp.exp(x)
+    c = jnp.cumsum(e, axis=-1)
+    c = (c / c[..., -1:]).astype(jnp.float32)
+    c = jnp.clip(c, 0.0, 1.0)
+    c = jax.lax.cummax(c, axis=-1)
+    c = c.at[..., -1].set(1.0)
+    zero = jnp.zeros(c.shape[:-1] + (1,), jnp.float32)
+    return jnp.concatenate([zero, c], axis=-1)
+
+
+def lower_bounds(cdf: jax.Array) -> jax.Array:
+    """Interval lower bounds P_0..P_{n-1} (the radix-tree keys) in [0, 1)."""
+    lo = cdf[..., :-1]
+    # Keys must live in [0, 1): clamp the (never-sampled) pathological case of
+    # an exactly-1.0 lower bound of a zero-width trailing interval.
+    return jnp.minimum(lo, _ONE_MINUS_EPS)
+
+
+def np_build_cdf(weights: np.ndarray) -> np.ndarray:
+    """Numpy oracle for tests/benchmarks (float64 accumulate, float32 out)."""
+    w = np.asarray(weights, np.float64)
+    c = np.cumsum(w)
+    c = (c / c[-1]).astype(np.float32)
+    c = np.clip(c, 0.0, 1.0)
+    c[-1] = 1.0
+    c = np.maximum.accumulate(c)
+    return np.concatenate([[np.float32(0.0)], c])

@@ -1,0 +1,404 @@
+"""Radix tree forests over CDF intervals (Binder & Keller 2019, Sec. 3).
+
+The structure: the unit interval is cut into ``m`` guide cells. A cell
+overlapped by a single CDF interval stores ``~i`` (two's complement, MSB set)
+directly in the guide table. A cell containing several interval lower bounds
+stores the index of its *root slot* node; the per-cell radix tree over the
+contained lower bounds hangs off that slot's right child, while the slot's
+left child is manually set to the interval overlapping the cell from the left
+(paper Fig. 11). Node index ``j`` doubles as CDF index: node ``j`` splits at
+``cdf[j]`` (the Apetrei enumeration), so nodes store only two child refs.
+
+Child references: ``>= 0`` → internal node id, ``< 0`` → leaf ``~i``.
+
+Slot accounting (a property worth stating): with ``n`` intervals there are
+exactly ``n`` node slots and all are used — ``n-1-#crossing`` internal
+separators (separator ``k`` ↔ node ``k+1``) plus ``#crossing+1`` cell root
+slots (the first leaf index of each non-empty cell; the crossing separator's
+own node id *is* the next cell's root slot). Indices of nodes of small
+subtrees are consecutive, which the paper exploits for cache locality.
+
+Two builders produce bit-identical forests:
+
+* :func:`build_forest` — TPU-native: the radix forest is the Cartesian
+  (max-)tree over separator distances ``delta(k) = bits(data[k]) XOR
+  bits(data[k+1])`` with cell-crossing separators clamped to the sentinel
+  distance. Parents are found in closed form with an all-nearest-greater-
+  values sparse-table descent: O(n log n) work, O(log n) depth, **no
+  atomics**, perfectly load-balanced (identical instruction stream per lane).
+* :func:`build_forest_apetrei` — a round-synchronous faithful emulation of
+  the paper's Algorithm 1 (bottom-up merging with atomicExch emulation),
+  kept as ground truth for tests and as executable documentation.
+
+Tie-breaking matches Algorithm 1: a subtree whose left/right boundary
+distances are equal merges left (becomes the *right* child of the node at its
+low bound). In nearest-greater terms: L(k) uses strict ``>``, R(k) uses
+``>=``, and the parent is L when ``delta[L] <= delta[R]``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .bits import DIST_SENTINEL, float_to_bits, np_xor_distance
+from .cdf import build_cdf, lower_bounds, np_build_cdf
+
+INVALID = np.int32(-(2**31))  # never a legal ref; only in untouched slots
+# Radix-tree depth over *distinct* float32 keys is <= ~34 (one bit level per
+# edge). Zero-width intervals (tied CDF values, delta == 0) chain arbitrarily
+# deep; such cells are flagged for balanced fallback at build time, so 256 is
+# a pure safety guard for fallback-disabled traversal.
+MAX_DEPTH = 256
+_DEPTH_ITERS = 48  # saturating depth count; anything deeper is flagged anyway
+
+
+class RadixForest(NamedTuple):
+    """Guide table + radix tree forest (+ cutpoint/fallback side tables)."""
+
+    cdf: jax.Array         # (n+1,) f32; interval i = [cdf[i], cdf[i+1])
+    table: jax.Array       # (m,)  i32; >=0 node id, <0 ~interval
+    left: jax.Array        # (n,)  i32 child refs
+    right: jax.Array       # (n,)  i32 child refs
+    cell_first: jax.Array  # (m+1,) i32 first interval overlapping each cell
+    fallback: jax.Array    # (m,)  bool; degenerate cell -> balanced bisection
+
+    @property
+    def n(self) -> int:
+        return self.left.shape[0]
+
+    @property
+    def m(self) -> int:
+        return self.table.shape[0]
+
+
+def _cells(data: jax.Array, m: int) -> jax.Array:
+    """Guide cell of each lower bound; float32 math to match traversal."""
+    c = jnp.floor(data * jnp.float32(m)).astype(jnp.int32)
+    return jnp.clip(c, 0, m - 1)
+
+
+def _block_max_table(d: jax.Array, levels: int) -> list[jax.Array]:
+    """T[j][s] = max d[s : s+2^j] (out of range = 0, neutral for uint)."""
+    tables = [d]
+    cur = d
+    for j in range(levels):
+        shift = 1 << j
+        shifted = jnp.concatenate(
+            [cur[shift:], jnp.zeros((min(shift, cur.shape[0]),), cur.dtype)]
+        )[: cur.shape[0]]
+        cur = jnp.maximum(cur, shifted)
+        tables.append(cur)
+    return tables
+
+
+def _nearest_greater(d: jax.Array):
+    """For every separator k return (dL, L, dR, R):
+
+    L(k): nearest l < k with d[l] >  d[k]  (virtual boundary -1, SENTINEL)
+    R(k): nearest r > k with d[r] >= d[k]  (virtual boundary len, SENTINEL)
+    """
+    s = d.shape[0]
+    levels = max(1, int(np.ceil(np.log2(max(s, 2)))))
+    T = _block_max_table(d, levels)
+    k = jnp.arange(s, dtype=jnp.int32)
+    v = d
+
+    # Left search: shrink exclusive upper bound p while block has no '> v'.
+    p = k
+    for j in range(levels, -1, -1):
+        step = 1 << j
+        idx = jnp.clip(p - step, 0, max(s - 1, 0))
+        can = (p >= step) & (T[min(j, len(T) - 1)][idx] <= v)
+        p = jnp.where(can, p - step, p)
+    L = p - 1
+    dL = jnp.where(L >= 0, d[jnp.clip(L, 0)], jnp.uint32(DIST_SENTINEL))
+
+    # Right search: grow start q while block has no '>= v'.
+    q = k + 1
+    for j in range(levels, -1, -1):
+        step = 1 << j
+        idx = jnp.clip(q, 0, max(s - 1, 0))
+        can = (q + step <= s) & (T[min(j, len(T) - 1)][idx] < v)
+        q = jnp.where(can, q + step, q)
+    R = q
+    dR = jnp.where(R < s, d[jnp.clip(R, 0, max(s - 1, 0))], jnp.uint32(DIST_SENTINEL))
+    return dL, L, dR, R
+
+
+@functools.partial(jax.jit, static_argnames=("m", "fallback_slack"))
+def build_forest_from_cdf(
+    cdf: jax.Array, m: int, fallback_slack: int = 2
+) -> RadixForest:
+    """TPU-native massively parallel forest construction (see module doc)."""
+    cdf = jnp.asarray(cdf, jnp.float32)
+    n = cdf.shape[0] - 1
+    data = lower_bounds(cdf)  # (n,)
+    cells = _cells(data, m)
+
+    bits = float_to_bits(data)
+    sep_raw = bits[:-1] ^ bits[1:]                      # (n-1,)
+    crossing = cells[:-1] != cells[1:]
+    sentinel = jnp.uint32(DIST_SENTINEL)
+    d = jnp.where(crossing, sentinel, sep_raw)          # separator distances
+
+    grid = jnp.arange(m + 1, dtype=jnp.float32) / jnp.float32(m)
+    cell_first = (
+        jnp.searchsorted(data, grid[:-1], side="right").astype(jnp.int32) - 1
+    )
+    cell_first = jnp.clip(cell_first, 0, n - 1)
+    cell_first = jnp.concatenate([cell_first, jnp.int32(n - 1)[None]])
+
+    counts = jnp.zeros((m,), jnp.int32).at[cells].add(1)
+    first_leaf = jnp.full((m,), n, jnp.int32).at[cells].min(
+        jnp.arange(n, dtype=jnp.int32)
+    )
+    f_safe = jnp.clip(first_leaf, 0, n - 1)
+    left_overlap = data[f_safe] > grid[:-1]
+    overlap = jnp.where(counts > 0, counts + left_overlap.astype(jnp.int32), 1)
+
+    left = jnp.full((n,), INVALID, jnp.int32)
+    right = jnp.full((n,), INVALID, jnp.int32)
+    leaf_parent = jnp.full((n,), -1, jnp.int32)   # node id above each leaf
+    node_parent = jnp.full((n,), -1, jnp.int32)   # node id above each node
+
+    if n > 1:
+        dL, _L, dR, _R = _nearest_greater(d)
+        k = jnp.arange(n - 1, dtype=jnp.int32)
+        in_cell = ~crossing
+        is_root = in_cell & (dL == sentinel) & (dR == sentinel)
+        par_is_L = dL <= dR
+        parent_sep = jnp.where(par_is_L, _L, _R)
+        parent_node = parent_sep + 1
+        node_id = k + 1
+
+        # Internal non-root separators -> child of parent separator's node.
+        wr = in_cell & ~is_root & par_is_L        # right child of L
+        wl = in_cell & ~is_root & ~par_is_L       # left child of R
+        right = right.at[jnp.where(wr, parent_node, n)].set(node_id, mode="drop")
+        left = left.at[jnp.where(wl, parent_node, n)].set(node_id, mode="drop")
+        node_parent = node_parent.at[jnp.where(in_cell & ~is_root, node_id, n)].set(
+            parent_node, mode="drop"
+        )
+
+        # Cell roots -> right child of the cell's root slot.
+        root_slot = first_leaf[cells[jnp.clip(k, 0, n - 1)]]
+        right = right.at[jnp.where(is_root, root_slot, n)].set(node_id, mode="drop")
+        node_parent = node_parent.at[jnp.where(is_root, node_id, n)].set(
+            root_slot, mode="drop"
+        )
+
+    # Leaves.
+    i = jnp.arange(n, dtype=jnp.int32)
+    dl = jnp.where(i > 0, d[jnp.clip(i - 1, 0)], sentinel) if n > 1 else jnp.full(
+        (n,), sentinel, jnp.uint32
+    )
+    dr = jnp.where(i < n - 1, d[jnp.clip(i, 0, max(n - 2, 0))], sentinel) if n > 1 else (
+        jnp.full((n,), sentinel, jnp.uint32)
+    )
+    lone = (dl == sentinel) & (dr == sentinel)
+    lpar_is_left = dl <= dr
+    lparent = jnp.where(lpar_is_left, i, i + 1)   # node id (sep i-1 -> node i)
+    leaf_ref = ~i
+    wr = ~lone & lpar_is_left
+    wl = ~lone & ~lpar_is_left
+    right = right.at[jnp.where(wr, lparent, n)].set(leaf_ref, mode="drop")
+    left = left.at[jnp.where(wl, lparent, n)].set(leaf_ref, mode="drop")
+    # Lone leaf: it is its cell's entire tree -> right child of its root slot
+    # (which is itself).
+    right = right.at[jnp.where(lone, i, n)].set(leaf_ref, mode="drop")
+    leaf_parent = jnp.where(lone, i, lparent)
+
+    # Manual left child of every root slot: the interval overlapping the cell
+    # from the left (unreachable when the cell starts exactly at a bound).
+    nonempty = counts > 0
+    manual = ~jnp.maximum(f_safe - 1, 0)
+    left = left.at[jnp.where(nonempty, f_safe, n)].set(manual, mode="drop")
+
+    # Guide table.
+    table = jnp.where(
+        counts == 0,
+        ~cell_first[:-1],
+        jnp.where(overlap == 1, ~f_safe, f_safe),
+    ).astype(jnp.int32)
+
+    # Traversal depth per leaf -> per-cell fallback flags (paper's degenerate-
+    # tree guard: rebuild-as-balanced becomes a per-cell bisection mode).
+    depth = jnp.zeros((n,), jnp.int32)
+    anc = leaf_parent
+    for _ in range(_DEPTH_ITERS):
+        live = anc >= 0
+        depth = depth + live.astype(jnp.int32)
+        anc = jnp.where(live, node_parent[jnp.clip(anc, 0)], anc)
+    depth = depth + 1  # the leaf resolution step itself
+
+    cell_depth = jnp.zeros((m,), jnp.int32).at[cells].max(depth)
+    allowed = jnp.ceil(jnp.log2(jnp.maximum(overlap, 2).astype(jnp.float32)))
+    fallback = (overlap > 1) & (
+        cell_depth > allowed.astype(jnp.int32) + fallback_slack
+    )
+
+    return RadixForest(cdf, table, left, right, cell_first, fallback)
+
+
+def build_forest(weights: jax.Array, m: int, fallback_slack: int = 2) -> RadixForest:
+    """Weights -> CDF (parallel scan) -> forest. The end-to-end build."""
+    return build_forest_from_cdf(build_cdf(weights), m, fallback_slack)
+
+
+# ---------------------------------------------------------------------------
+# Faithful Apetrei-style emulation of the paper's Algorithm 1 (ground truth).
+# ---------------------------------------------------------------------------
+
+
+def build_forest_apetrei(cdf: np.ndarray, m: int) -> dict:
+    """Round-synchronous numpy emulation of Algorithm 1.
+
+    One logical thread per leaf merges bottom-up; the GPU ``atomicExch`` on
+    ``otherBounds[parent]`` is emulated by posting bounds and letting the
+    *second* arrival continue (the result is order-independent: the winner
+    takes over the identical merged range). Distances use the text's
+    "maximum" semantics at cell boundaries (see bits.DIST_SENTINEL note).
+    Returns dict(table, left, right) matching :func:`build_forest_from_cdf`.
+    """
+    cdf = np.asarray(cdf, np.float32)
+    n = len(cdf) - 1
+    data = np.minimum(cdf[:-1], np.float32(np.nextafter(np.float32(1), np.float32(0))))
+    cells = np.clip(np.floor(data * np.float32(m)).astype(np.int64), 0, m - 1)
+
+    def dist(a: int, b: int) -> int:
+        """Distance between leaves a and b=a+1 (sentinel at boundaries)."""
+        if a < 0 or b > n - 1 or cells[a] != cells[b]:
+            return int(DIST_SENTINEL)
+        return int(np_xor_distance(data[a : a + 1], data[b : b + 1])[0])
+
+    left = np.full(n, INVALID, np.int64)
+    right = np.full(n, INVALID, np.int64)
+    other = np.full(n, -1, np.int64)   # otherBounds
+
+    # Thread state: (nodeId, lo, hi); leaves encoded ~i.
+    threads = [(~i, i, i) for i in range(n)]
+    while threads:
+        nxt = []
+        for node_id, lo, hi in threads:
+            dl, dr = dist(lo - 1, lo), dist(hi, hi + 1)
+            if dl == dr == int(DIST_SENTINEL):
+                # Cell root (incl. lone leaf): Algorithm 1's tie rule makes it
+                # the right child of node range[0] == first leaf of the cell —
+                # exactly the root-slot write. Thread terminates.
+                right[lo] = node_id
+                continue
+            child = 0 if dl > dr else 1            # 0 = left child
+            parent = hi + 1 if child == 0 else lo
+            if child == 0:
+                left[parent] = node_id
+            else:
+                right[parent] = node_id
+            # atomicExch(otherBounds[parent], range[child])
+            posted = lo if child == 0 else hi
+            prev, other[parent] = other[parent], posted
+            if prev == -1:
+                continue  # first arrival dies; sibling will merge up
+            # Second arrival: range[1-child] <- otherBound, continue as parent.
+            nlo, nhi = (prev, hi) if child == 1 else (lo, prev)
+            nxt.append((parent, nlo, nhi))
+        threads = nxt
+
+    # Manual left child per non-empty cell root slot + guide table.
+    table = np.zeros(m, np.int64)
+    grid = (np.arange(m, dtype=np.float32)) / np.float32(m)
+    cf = np.clip(np.searchsorted(data, grid, side="right") - 1, 0, n - 1)
+    for c in range(m):
+        leaves = np.where(cells == c)[0]
+        if len(leaves) == 0:
+            table[c] = ~cf[c]
+            continue
+        f = int(leaves[0])
+        overlap = len(leaves) + (1 if data[f] > grid[c] else 0)
+        if overlap == 1:
+            table[c] = ~f
+        else:
+            table[c] = f
+        left[f] = ~max(f - 1, 0)
+    return {
+        "table": table.astype(np.int32),
+        "left": left.astype(np.int32),
+        "right": right.astype(np.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Validation / analysis helpers (numpy; used by tests and benchmarks).
+# ---------------------------------------------------------------------------
+
+
+def forest_to_numpy(f: RadixForest) -> dict:
+    return {k: np.asarray(v) for k, v in f._asdict().items()}
+
+
+def validate_forest(f: RadixForest) -> None:
+    """Structural invariants; raises AssertionError on violation."""
+    fn = forest_to_numpy(f)
+    cdf, table, left, right = fn["cdf"], fn["table"], fn["left"], fn["right"]
+    n, m = len(left), len(table)
+    data = cdf[:-1]
+    cells = np.clip(np.floor(data * np.float32(m)).astype(np.int64), 0, m - 1)
+
+    for c in range(m):
+        ref = int(table[c])
+        leaves = np.where(cells == c)[0]
+        if ref < 0:
+            i = ~ref
+            assert 0 <= i < n
+            # the single overlapping interval must cover the cell start
+            assert data[i] <= (c / m) + 1e-7 or (len(leaves) == 1 and leaves[0] == i)
+            continue
+        # In-order traversal of the cell tree must enumerate the cell's
+        # leaves in increasing order (plus the manual left-overlap leaf).
+        got: list[int] = []
+        depth_guard = 0
+
+        def walk(j: int) -> None:
+            nonlocal depth_guard
+            depth_guard += 1
+            assert depth_guard < 10_000
+            if j < 0:
+                got.append(~j)
+                return
+            assert 0 <= j < n
+            walk(int(left[j]))
+            walk(int(right[j]))
+
+        walk(ref)
+        f0 = int(leaves[0])
+        expect = [max(f0 - 1, 0)] + list(leaves)
+        assert got == expect, (c, got, expect)
+
+
+def depth_stats(f: RadixForest) -> dict:
+    """Per-cell traversal depth statistics (node visits to reach a leaf)."""
+    fn = forest_to_numpy(f)
+    table, left, right = fn["table"], fn["left"], fn["right"]
+    n, m = len(left), len(table)
+    depths = np.zeros(n, np.int64)
+
+    for c in range(m):
+        ref = int(table[c])
+        if ref < 0:
+            continue
+        stack = [(ref, 1)]
+        while stack:
+            j, dep = stack.pop()
+            if j < 0:
+                depths[~j] = max(depths[~j], dep)
+                continue
+            stack.append((int(left[j]), dep + 1))
+            stack.append((int(right[j]), dep + 1))
+    return {
+        "max_depth": int(depths.max(initial=0)),
+        "mean_depth": float(depths.mean()) if n else 0.0,
+        "depths": depths,
+    }

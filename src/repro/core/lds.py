@@ -1,0 +1,110 @@
+"""Low-discrepancy sequence generators (Hammersley, Halton, Sobol', van der Corput).
+
+Used to reproduce the paper's QMC experiments (Figs. 1, 7, 8, 9): warping a
+low-discrepancy sequence through the *monotone* inverse CDF preserves
+uniformity properties in warped space; warping through the Alias Method does
+not. Also used by the serving layer for per-slot QMC token-sampling streams.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+_PRIMES = np.array(
+    [2, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37, 41, 43, 47, 53], np.int64
+)
+
+# Sobol' direction numbers (Joe & Kuo style) for the first 8 dimensions.
+# Dim 0 is van der Corput in base 2. Entries: (s, a, m_i ...).
+_SOBOL_POLY = [
+    (1, 0, [1]),
+    (2, 1, [1, 3]),
+    (3, 1, [1, 3, 1]),
+    (3, 2, [1, 1, 1]),
+    (4, 1, [1, 1, 3, 3]),
+    (4, 4, [1, 3, 5, 13]),
+    (5, 2, [1, 1, 5, 5, 17]),
+]
+
+
+def radical_inverse_base2(i: np.ndarray) -> np.ndarray:
+    """Van der Corput sequence in base 2 via 32-bit reversal (float32 exact)."""
+    i = np.asarray(i, np.uint32)
+    b = i.copy()
+    b = ((b & np.uint32(0x55555555)) << np.uint32(1)) | ((b & np.uint32(0xAAAAAAAA)) >> np.uint32(1))
+    b = ((b & np.uint32(0x33333333)) << np.uint32(2)) | ((b & np.uint32(0xCCCCCCCC)) >> np.uint32(2))
+    b = ((b & np.uint32(0x0F0F0F0F)) << np.uint32(4)) | ((b & np.uint32(0xF0F0F0F0)) >> np.uint32(4))
+    b = ((b & np.uint32(0x00FF00FF)) << np.uint32(8)) | ((b & np.uint32(0xFF00FF00)) >> np.uint32(8))
+    b = (b << np.uint32(16)) | (b >> np.uint32(16))
+    return (b >> np.uint32(8)).astype(np.float64) * (1.0 / (1 << 24))
+
+
+def radical_inverse(i: np.ndarray, base: int) -> np.ndarray:
+    """Van der Corput sequence in arbitrary integer base."""
+    if base == 2:
+        return radical_inverse_base2(i)
+    i = np.asarray(i, np.int64).copy()
+    inv = np.zeros(i.shape, np.float64)
+    f = 1.0 / base
+    while np.any(i > 0):
+        inv += f * (i % base)
+        i //= base
+        f /= base
+    return inv
+
+
+def hammersley(n: int, dims: int = 2) -> np.ndarray:
+    """The n-point Hammersley set in [0,1)^dims (first component = i/n)."""
+    idx = np.arange(n, dtype=np.int64)
+    cols = [idx.astype(np.float64) / n]
+    for d in range(dims - 1):
+        cols.append(radical_inverse(idx, int(_PRIMES[d])))
+    return np.stack(cols, axis=-1)
+
+
+def halton(n: int, dims: int = 2, start: int = 0) -> np.ndarray:
+    idx = np.arange(start, start + n, dtype=np.int64)
+    cols = [radical_inverse(idx, int(_PRIMES[d])) for d in range(dims)]
+    return np.stack(cols, axis=-1)
+
+
+def _sobol_directions(dim: int, bits: int = 32) -> np.ndarray:
+    """Direction numbers v_k (as uint32 scaled by 2^32) for one dimension."""
+    if dim == 0:
+        return np.array([1 << (31 - k) for k in range(bits)], np.uint64)
+    s, a, m = _SOBOL_POLY[(dim - 1) % len(_SOBOL_POLY)]
+    m = list(m)
+    v = np.zeros(bits, np.uint64)
+    for k in range(s):
+        v[k] = np.uint64(m[k]) << np.uint64(31 - k)
+    for k in range(s, bits):
+        vk = v[k - s] ^ (v[k - s] >> np.uint64(s))
+        for j in range(1, s):
+            if (a >> (s - 1 - j)) & 1:
+                vk ^= v[k - j]
+        v[k] = vk
+    return v
+
+
+def sobol(n: int, dims: int = 2, scramble_seed: int | None = None) -> np.ndarray:
+    """First n points of the Sobol' sequence (graycode order), optional
+    Owen-style digital shift (XOR scramble) per dimension."""
+    out = np.zeros((n, dims), np.float64)
+    rng = np.random.default_rng(scramble_seed) if scramble_seed is not None else None
+    idx = np.arange(n, dtype=np.uint64)
+    gray = idx ^ (idx >> np.uint64(1))
+    for d in range(dims):
+        v = _sobol_directions(d)
+        x = np.zeros(n, np.uint64)
+        g = gray.copy()
+        for k in range(32):
+            bit = (g >> np.uint64(k)) & np.uint64(1)
+            x ^= bit * v[k]
+        if rng is not None:
+            x ^= np.uint64(rng.integers(0, 1 << 32, dtype=np.uint64))
+        out[:, d] = (x >> np.uint64(8)).astype(np.float64) * (1.0 / (1 << 24))
+    return out
+
+
+def uniform(n: int, dims: int = 2, seed: int = 0) -> np.ndarray:
+    """Plain pseudo-random points — the MC baseline for QMC comparisons."""
+    return np.random.default_rng(seed).random((n, dims))

@@ -1,0 +1,139 @@
+"""Inverse-CDF samplers: the paper's Algorithm 2 plus every surveyed baseline.
+
+All JAX samplers are batch-vectorized; divergence is handled by per-lane
+predication inside a ``while_loop``, so the per-batch cost is the max lane
+cost — exactly the warp-synchronized cost model (``average_32``) the paper
+optimizes for. Numpy twins with exact *memory-load counting* live in
+:mod:`repro.core.counting` and reproduce Table 1.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .forest import MAX_DEPTH, RadixForest
+
+
+def sample_linear(cdf: jax.Array, xi: jax.Array) -> jax.Array:
+    """O(n) linear scan (Sec. 2.1). For small n / reference only."""
+    # i = #{k : cdf[k+1] <= xi}
+    return jnp.sum(cdf[1:-1][None, :] <= xi[:, None], axis=-1).astype(jnp.int32)
+
+
+def sample_binary(cdf: jax.Array, xi: jax.Array) -> jax.Array:
+    """O(log n) bisection (Sec. 2.2)."""
+    i = jnp.searchsorted(cdf[1:], xi, side="right").astype(jnp.int32)
+    return jnp.clip(i, 0, cdf.shape[0] - 2)
+
+
+def _bisect(cdf: jax.Array, xi: jax.Array, lo: jax.Array, hi: jax.Array, steps: int):
+    """Find i in [lo, hi] with cdf[i] <= xi < cdf[i+1]; fixed-trip bisection."""
+
+    def body(_, state):
+        lo, hi = state
+        mid = (lo + hi + 1) >> 1
+        ge = xi >= cdf[mid]
+        return jnp.where(ge, mid, lo), jnp.where(ge, hi, mid - 1)
+
+    lo, hi = jax.lax.fori_loop(0, steps, body, (lo, hi))
+    return lo
+
+
+def sample_cutpoint_binary(
+    cdf: jax.Array, cell_first: jax.Array, xi: jax.Array
+) -> jax.Array:
+    """Cutpoint Method with in-cell binary search (Sec. 2.5): O(1) average,
+    O(log n) worst case. ``cell_first`` as built by the forest constructor
+    ((m+1,), conservative last = first of next cell)."""
+    m = cell_first.shape[0] - 1
+    g = jnp.clip(jnp.floor(xi * jnp.float32(m)).astype(jnp.int32), 0, m - 1)
+    lo = cell_first[g]
+    hi = cell_first[g + 1]
+    return _bisect(cdf, xi, lo, hi, 32)
+
+
+def sample_cutpoint_linear(
+    cdf: jax.Array, cell_first: jax.Array, xi: jax.Array, max_scan: int
+) -> jax.Array:
+    """Cutpoint Method with in-cell linear search (Sec. 2.5, original)."""
+    m = cell_first.shape[0] - 1
+    g = jnp.clip(jnp.floor(xi * jnp.float32(m)).astype(jnp.int32), 0, m - 1)
+    i = cell_first[g]
+
+    def body(_, i):
+        done = xi < cdf[jnp.clip(i + 1, 0, cdf.shape[0] - 1)]
+        return jnp.where(done, i, i + 1)
+
+    return jax.lax.fori_loop(0, max_scan, body, i)
+
+
+@functools.partial(jax.jit, static_argnames=("use_fallback", "unroll"))
+def sample_forest(
+    forest: RadixForest,
+    xi: jax.Array,
+    use_fallback: bool = True,
+    unroll: int = 1,
+) -> jax.Array:
+    """Algorithm 2: guide-table lookup, then radix-tree descent.
+
+    Node index doubles as CDF index: descend left iff ``xi < cdf[j]``.
+    Leaf refs have the MSB set (two's complement ~i). Lanes in degenerate
+    cells (``forest.fallback``) use balanced index bisection instead — the
+    paper's logarithmic-worst-case guard.
+    """
+    cdf, table, left, right = forest.cdf, forest.table, forest.left, forest.right
+    n = forest.n
+    m = forest.m
+    g = jnp.clip(jnp.floor(xi * jnp.float32(m)).astype(jnp.int32), 0, m - 1)
+    j = table[g]
+
+    if use_fallback:
+        fb = forest.fallback[g] & (j >= 0)
+        lo = forest.cell_first[g]
+        hi = forest.cell_first[g + 1]
+        bal = _bisect(cdf, xi, lo, hi, 32)
+        j = jnp.where(fb, ~bal, j)  # pre-resolve fallback lanes
+
+    def cond(state):
+        j, it = state
+        return jnp.any(j >= 0) & (it < MAX_DEPTH)
+
+    def body(state):
+        j, it = state
+        jj = jnp.clip(j, 0, n - 1)
+        go_left = xi < cdf[jj]
+        nxt = jnp.where(go_left, left[jj], right[jj])
+        return jnp.where(j >= 0, nxt, j), it + 1
+
+    j, _ = jax.lax.while_loop(cond, body, (j, jnp.int32(0)))
+    return ~j
+
+
+def sample_forest_with_stats(forest: RadixForest, xi: jax.Array):
+    """As :func:`sample_forest` but also returns per-lane node-visit counts
+    (loads beyond the guide-table load) — the Table-1 instrumentation."""
+    cdf, table, left, right = forest.cdf, forest.table, forest.left, forest.right
+    n, m = forest.n, forest.m
+    g = jnp.clip(jnp.floor(xi * jnp.float32(m)).astype(jnp.int32), 0, m - 1)
+    j = table[g]
+
+    def cond(state):
+        j, _c, it = state
+        return jnp.any(j >= 0) & (it < MAX_DEPTH)
+
+    def body(state):
+        j, c, it = state
+        jj = jnp.clip(j, 0, n - 1)
+        go_left = xi < cdf[jj]
+        nxt = jnp.where(go_left, left[jj], right[jj])
+        active = j >= 0
+        return (
+            jnp.where(active, nxt, j),
+            c + active.astype(jnp.int32),
+            it + 1,
+        )
+
+    j, c, _ = jax.lax.while_loop(cond, body, (j, jnp.zeros_like(g), jnp.int32(0)))
+    return ~j, c

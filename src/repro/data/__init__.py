@@ -1,0 +1,4 @@
+from .mixture import MixtureSampler
+from .pipeline import SyntheticCorpus, make_batch
+
+__all__ = ["MixtureSampler", "SyntheticCorpus", "make_batch"]

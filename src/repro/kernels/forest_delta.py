@@ -1,0 +1,53 @@
+"""Forest-construction distance kernel (Algorithm 1's per-element work).
+
+Computes the separator distance array that fully determines the radix forest:
+``delta(k) = bits(data[k]) XOR bits(data[k+1])``, clamped to the sentinel
+where the two lower bounds fall into different guide cells (the paper's
+"setting the distance to the maximum"). Pure elementwise VPU work (bitcasts,
+XOR, floor) — the O(n) hot loop of construction; the nearest-greater descent
+that consumes it stays in XLA (see core.forest).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.bits import DIST_SENTINEL
+
+
+def _delta_kernel(a_ref, b_ref, o_ref, *, m: int):
+    a = a_ref[...]
+    b = b_ref[...]
+    bits_a = jax.lax.bitcast_convert_type(a, jnp.uint32)
+    bits_b = jax.lax.bitcast_convert_type(b, jnp.uint32)
+    raw = bits_a ^ bits_b
+    ca = jnp.floor(a * jnp.float32(m)).astype(jnp.int32)
+    cb = jnp.floor(b * jnp.float32(m)).astype(jnp.int32)
+    o_ref[...] = jnp.where(ca != cb, jnp.uint32(DIST_SENTINEL), raw)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "block", "interpret"))
+def forest_delta(
+    data: jax.Array, m: int, block: int = 1024, interpret: bool = True
+) -> jax.Array:
+    """data (n,) f32 increasing lower bounds -> (n-1,) uint32 distances."""
+    n = data.shape[0]
+    s = n - 1
+    sp = max((s + block - 1) // block * block, block)
+    a = jnp.pad(data[:-1], (0, sp - s))
+    b = jnp.pad(data[1:], (0, sp - s))
+    out = pl.pallas_call(
+        functools.partial(_delta_kernel, m=m),
+        grid=(sp // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((sp,), jnp.uint32),
+        interpret=interpret,
+    )(a, b)
+    return out[:s]

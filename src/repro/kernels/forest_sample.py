@@ -1,0 +1,76 @@
+"""Algorithm 2 as a Pallas kernel: shared-distribution batch sampling.
+
+The paper's primary workload: ONE distribution (environment map row, data
+mixture, expert gate prior), MILLIONS of uniforms. Guide table + node arrays
++ CDF stay VMEM-resident (O(n) each; n = 2^20 f32 -> 4 MB/table); uniforms
+stream through in tiles. The traversal runs as a fixed-trip predicated loop:
+every lane advances until *all* lanes in the tile hit a leaf — the hardware
+analogue of the paper's warp-synchronized cost (``average_32``), which is
+precisely the quantity radix forests minimize, so the algorithm/hardware fit
+is tighter on TPU than on the paper's GPUs.
+
+Gathers (``jnp.take`` from VMEM) are the honest cost: one per lane per level.
+Depth is bounded (<= ~34 for distinct float32 keys; build flags tied chains
+into fallback cells which ops.py pre-resolves), so `depth` is static.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _forest_kernel(cdf_ref, table_ref, left_ref, right_ref, xi_ref, o_ref, *, depth: int, m: int):
+    xi = xi_ref[...]
+    n = left_ref.shape[0]
+    g = jnp.clip(jnp.floor(xi * jnp.float32(m)).astype(jnp.int32), 0, m - 1)
+    j = jnp.take(table_ref[...], g, axis=0)
+    cdf = cdf_ref[...]
+    left = left_ref[...]
+    right = right_ref[...]
+
+    def body(_, j):
+        jj = jnp.clip(j, 0, n - 1)
+        go_left = xi < jnp.take(cdf, jj, axis=0)
+        nxt = jnp.where(go_left, jnp.take(left, jj, axis=0), jnp.take(right, jj, axis=0))
+        return jnp.where(j >= 0, nxt, j)
+
+    j = jax.lax.fori_loop(0, depth, body, j)
+    o_ref[...] = ~j
+
+
+@functools.partial(jax.jit, static_argnames=("depth", "block", "interpret"))
+def forest_sample(
+    cdf: jax.Array,
+    table: jax.Array,
+    left: jax.Array,
+    right: jax.Array,
+    xi: jax.Array,
+    depth: int = 40,
+    block: int = 2048,
+    interpret: bool = True,
+) -> jax.Array:
+    """Batch Algorithm 2. xi (B,) -> interval indices (B,) int32."""
+    (B,) = xi.shape
+    m = table.shape[0]
+    n = left.shape[0]
+    Bp = (B + block - 1) // block * block
+    xip = jnp.pad(xi, (0, Bp - B))
+    full = lambda size: pl.BlockSpec((size,), lambda i: (0,))
+    out = pl.pallas_call(
+        functools.partial(_forest_kernel, depth=depth, m=m),
+        grid=(Bp // block,),
+        in_specs=[
+            full(n + 1),
+            full(m),
+            full(n),
+            full(n),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((Bp,), jnp.int32),
+        interpret=interpret,
+    )(cdf, table, left, right, xip)
+    return out[:B]

@@ -1,0 +1,57 @@
+"""Public jit'd kernel entry points with backend dispatch.
+
+On TPU the Pallas kernels compile natively; everywhere else (this CPU
+container, tests, dry-runs) they run in ``interpret=True`` mode, which
+executes the same kernel bodies through XLA for bit-accurate validation.
+`use_pallas=False` (the dry-run default) swaps in the pure-jnp references so
+512-device compiles stay fast — standard backend-selection practice.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.forest import RadixForest
+
+from . import ref
+from .cdf_scan import cdf_scan as _cdf_scan
+from .forest_delta import forest_delta as _forest_delta
+from .forest_sample import forest_sample as _forest_sample
+from .sample_tiled import sample_rows as _sample_rows
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def fused_cdf(x: jax.Array, softmax: bool = True, use_pallas: bool = True) -> jax.Array:
+    """(B, V) logits/weights -> (B, V) inclusive CDF rows."""
+    if not use_pallas:
+        return ref.ref_cdf_scan(x, softmax=softmax)
+    return _cdf_scan(x, softmax=softmax, interpret=_interpret())
+
+
+def sample_rows(cdf_rows: jax.Array, xi: jax.Array, use_pallas: bool = True) -> jax.Array:
+    """Per-row inverse CDF: (B, V) x (B, k) -> (B, k) int32 indices."""
+    if not use_pallas:
+        return ref.ref_sample_rows(cdf_rows, xi)
+    return _sample_rows(cdf_rows, xi, interpret=_interpret())
+
+
+def forest_sample(forest: RadixForest, xi: jax.Array, use_pallas: bool = True) -> jax.Array:
+    """Shared-distribution Algorithm 2 over a batch of uniforms."""
+    if not use_pallas:
+        return ref.ref_forest_sample(
+            forest.cdf, forest.table, forest.left, forest.right, xi
+        )
+    return _forest_sample(
+        forest.cdf, forest.table, forest.left, forest.right, xi,
+        interpret=_interpret(),
+    )
+
+
+def forest_delta(data: jax.Array, m: int, use_pallas: bool = True) -> jax.Array:
+    """Separator distances for forest construction."""
+    if not use_pallas:
+        return ref.ref_forest_delta(data, m)
+    return _forest_delta(data, m, interpret=_interpret())

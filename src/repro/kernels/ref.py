@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bits import DIST_SENTINEL
+
+
+def ref_cdf_scan(x: jax.Array, softmax: bool = True) -> jax.Array:
+    """Oracle for kernels.cdf_scan.cdf_scan (float32 accumulation)."""
+    x = x.astype(jnp.float32)
+    if softmax:
+        x = x - jnp.max(x, axis=-1, keepdims=True)
+        e = jnp.exp(x)
+    else:
+        e = x
+    c = jnp.cumsum(e, axis=-1)
+    return c / c[..., -1:]
+
+
+def ref_sample_rows(cdf_rows: jax.Array, xi: jax.Array) -> jax.Array:
+    """Oracle for kernels.sample_tiled.sample_rows."""
+    V = cdf_rows.shape[-1]
+
+    def one(row, u):
+        return jnp.clip(
+            jnp.searchsorted(row, u, side="right").astype(jnp.int32), 0, V - 1
+        )
+
+    return jax.vmap(one)(cdf_rows, xi)
+
+
+def ref_forest_sample(cdf, table, left, right, xi, depth: int = 64) -> jax.Array:
+    """Oracle for kernels.forest_sample.forest_sample (no-fallback Alg. 2)."""
+    n = left.shape[0]
+    m = table.shape[0]
+    g = jnp.clip(jnp.floor(xi * jnp.float32(m)).astype(jnp.int32), 0, m - 1)
+    j = table[g]
+
+    def body(_, j):
+        jj = jnp.clip(j, 0, n - 1)
+        go_left = xi < cdf[jj]
+        nxt = jnp.where(go_left, left[jj], right[jj])
+        return jnp.where(j >= 0, nxt, j)
+
+    return ~jax.lax.fori_loop(0, depth, body, j)
+
+
+def ref_forest_delta(data: jax.Array, m: int) -> jax.Array:
+    """Oracle for kernels.forest_delta.forest_delta."""
+    bits = jax.lax.bitcast_convert_type(data.astype(jnp.float32), jnp.uint32)
+    raw = bits[:-1] ^ bits[1:]
+    cells = jnp.floor(data * jnp.float32(m)).astype(jnp.int32)
+    return jnp.where(cells[:-1] != cells[1:], jnp.uint32(DIST_SENTINEL), raw)
+
+
+def ref_flash_attention(q, k, v, causal: bool = True) -> jax.Array:
+    """Oracle for kernels.flash_attention (materialized scores)."""
+    import numpy as np
+
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bqhgk,bthk->bhgqt", qg, k.astype(jnp.float32))
+    s = s / np.sqrt(hd)
+    if causal:
+        mask = jnp.arange(Sk)[None, :] <= jnp.arange(Sq)[:, None]
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqt,bthk->bqhgk", w, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)

@@ -1,0 +1,65 @@
+"""Two-level tiled inverse-CDF search — the TPU-native Cutpoint Method.
+
+Per-row decode sampling: each of B rows has its *own* CDF (from that row's
+logits) and k uniforms. A GPU thread would binary-search with scattered
+loads; a TPU lane cannot. The TPU-idiomatic equivalent of the paper's guide
+table is *uniform-in-index* tiling: the last element of each T-wide tile is a
+cutpoint; level 1 vector-compares xi against the V/T cutpoints, level 2
+vector-compares within the one selected tile (a contiguous dynamic slice —
+no gathers anywhere). Cost: O(V/T + T) vector ops instead of O(V), minimized
+at T ~ sqrt(V); both levels are dense VPU compares, i.e. zero divergence —
+the kernel-level realization of the paper's "all lanes finish together" goal.
+
+CDF convention: row[i] = P_{i+1} (leading zero omitted, row[V-1] ~= 1), i.e.
+the output of :mod:`repro.kernels.cdf_scan`. Returned index i satisfies
+P_i <= xi < P_{i+1}.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sample_kernel(cdf_ref, xi_ref, o_ref, *, tile: int, k: int):
+    row = cdf_ref[...]                      # (1, Vp)
+    V = row.shape[-1]
+    nt = V // tile
+    bounds = row.reshape(nt, tile)[:, -1]   # (nt,) tile cutpoints
+    for kk in range(k):                     # k is small & static (usually 1)
+        xi = xi_ref[0, kk]
+        t = jnp.sum((bounds <= xi).astype(jnp.int32))
+        t = jnp.minimum(t, nt - 1)
+        seg = pl.load(cdf_ref, (0, pl.dslice(t * tile, tile)))
+        off = jnp.sum((seg <= xi).astype(jnp.int32))
+        i = t * tile + jnp.minimum(off, tile - 1)
+        o_ref[0, kk] = i
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def sample_rows(
+    cdf_rows: jax.Array,
+    xi: jax.Array,
+    tile: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    """cdf_rows (B, V) inclusive CDFs, xi (B, k) uniforms -> (B, k) int32."""
+    B, V = cdf_rows.shape
+    k = xi.shape[1]
+    Vp = (V + tile - 1) // tile * tile
+    # pad with +inf-like sentinel: padded entries never counted as <= xi
+    cp = jnp.pad(cdf_rows, ((0, 0), (0, Vp - V)), constant_values=2.0)
+    out = pl.pallas_call(
+        functools.partial(_sample_kernel, tile=tile, k=k),
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, Vp), lambda i: (i, 0)),
+            pl.BlockSpec((1, k), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, k), jnp.int32),
+        interpret=interpret,
+    )(cp, xi)
+    return jnp.minimum(out, V - 1)

@@ -1,0 +1,21 @@
+"""Production mesh definition (function, not constant: importing this module
+never touches jax device state)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips (TPU v5e-256 topology).
+    Multi-pod: (pod=2, data=16, model=16) = 512 chips; the pod axis carries
+    data parallelism + FSDP (and optionally pipeline stages, see
+    repro.dist.pipeline)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(n: int = 1, model: int = 1):
+    """Small mesh over host devices for tests (requires
+    XLA_FLAGS=--xla_force_host_platform_device_count set before jax init)."""
+    return jax.make_mesh((n // model, model), ("data", "model"))

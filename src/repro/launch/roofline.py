@@ -1,0 +1,262 @@
+"""Roofline analysis from compiled dry-run artifacts (no hardware needed).
+
+Terms (assignment formulas; TPU v5e constants):
+    t_compute = FLOPs_global    / (chips * 197e12)     [bf16 peak]
+    t_mem     = HBM_bytes_global/ (chips * 819e9)
+    t_coll    = coll_bytes_global/(chips * 50e9)       [per-link ICI]
+
+``cost_analysis()`` semantics (global vs per-device FLOPs) are calibrated
+empirically once per process with a known sharded matmul — see
+``calibrate_cost_semantics``; results are normalized to GLOBAL before the
+formulas. Collective bytes are parsed from the post-SPMD optimized HLO
+(shapes there are per-device); we report both raw operand bytes and a
+ring-algorithm wire estimate (all-reduce 2x(n-1)/n, all-gather (n-1)/n ...).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+import numpy as np
+
+PEAK_FLOPS = 197e12     # bf16 / chip
+HBM_BW = 819e9          # bytes/s / chip
+LINK_BW = 50e9          # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_COLL_KINDS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(s: str) -> int:
+    m = _SHAPE_RE.match(s.strip())
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    if dt not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)           # iota form: [n_groups,group_size]<=..
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_LIST_RE.search(line)      # explicit form: {{0,1,2,...},{...}}
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return 2
+
+
+def parse_collectives(
+    hlo_text: str, trip_hints: tuple[int, ...] = ()
+) -> dict[str, dict[str, float]]:
+    """Per-collective-kind byte totals from optimized (per-device) HLO.
+
+    Operands are rendered without shapes in optimized dumps, so per-op
+    operand bytes are derived from the result shape R and group size G:
+      all-reduce: op=R            wire=2*R*(G-1)/G
+      all-gather: op=R/G          wire=R*(G-1)/G
+      reduce-scatter: op=R*G      wire=R*(G-1)
+      all-to-all: op=R            wire=R*(G-1)/G
+      collective-permute: op=R    wire=R
+
+    HloCostAnalysis-style text counts a while (lax.scan) body ONCE; real
+    execution runs it trip_count times. Each op's jax scope survives in
+    metadata op_name, so ops at while-nesting depth d are multiplied by
+    prod(trip_hints[:d]) (e.g. (n_periods,) for the layer scan, or
+    (microbatches, n_periods) with gradient accumulation).
+    """
+    out: dict[str, dict[str, float]] = {
+        k: {"count": 0, "operand_bytes": 0.0, "result_bytes": 0.0, "wire_bytes": 0.0}
+        for k in _COLL_KINDS
+    }
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.search(
+            r"=\s+((?:\([^)]*\))|(?:\w+\[[\d,]*\]\S*))\s+([\w-]+?)(-start)?\(", ls
+        )
+        if not m:
+            continue
+        result_s, op, started = m.group(1), m.group(2), m.group(3)
+        if op not in _COLL_KINDS:
+            continue
+        kind = op
+        shapes = _SHAPE_RE.findall(result_s)
+        rbytes = sum(_shape_bytes(f"{dt}[{dims}]") for dt, dims in shapes)
+        if started and len(shapes) >= 2:
+            rbytes = rbytes // 2  # -start tuples duplicate the buffer
+        G = _group_size(ls)
+        if kind == "all-reduce":
+            obytes, wire = rbytes, 2.0 * rbytes * (G - 1) / G
+        elif kind == "all-gather":
+            obytes, wire = rbytes / G, rbytes * (G - 1) / G
+        elif kind == "reduce-scatter":
+            obytes, wire = rbytes * G, float(rbytes) * (G - 1)
+        elif kind == "all-to-all":
+            obytes, wire = rbytes, rbytes * (G - 1) / G
+        else:  # collective-permute
+            obytes, wire = rbytes, float(rbytes)
+        mo = re.search(r'op_name="([^"]*)"', ls)
+        depth = mo.group(1).count("/while/") if mo else 0
+        mult = 1.0
+        for d in range(depth):
+            mult *= trip_hints[d] if d < len(trip_hints) else 1
+        rec = out[kind]
+        rec["count"] += 1
+        rec["operand_bytes"] += obytes * mult
+        rec["result_bytes"] += rbytes * mult
+        rec["wire_bytes"] += wire * mult
+    return out
+
+
+_COST_SEMANTICS: dict[str, float] | None = None
+
+
+def calibrate_cost_semantics(mesh) -> dict[str, float]:
+    """Determine whether compiled.cost_analysis() reports global or
+    per-device FLOPs by compiling a known matmul sharded over the mesh."""
+    global _COST_SEMANTICS
+    if _COST_SEMANTICS is not None:
+        return _COST_SEMANTICS
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    ndev = int(np.prod(list(mesh.shape.values())))
+    M = N = K = 1024
+    expect_global = 2 * M * N * K
+    x = jax.ShapeDtypeStruct((M, K), jnp.float32)
+    y = jax.ShapeDtypeStruct((K, N), jnp.float32)
+    axis0 = tuple(mesh.axis_names)[0]
+    sx = NamedSharding(mesh, P(axis0, None))
+    sy = NamedSharding(mesh, P(None, None))
+    comp = (
+        jax.jit(lambda a, b: a @ b, in_shardings=(sx, sy))
+        .lower(x, y)
+        .compile()
+    )
+    ca = comp.cost_analysis()
+    ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+    flops = float(ca.get("flops", 0.0))
+    ratio = flops / expect_global if expect_global else 0.0
+    # ratio ~1 -> global; ~1/ndev -> per-device
+    scale = 1.0 if ratio > 0.5 else float(ndev) if ratio > 0 else 0.0
+    _COST_SEMANTICS = {"flops_scale_to_global": scale, "calib_ratio": ratio}
+    return _COST_SEMANTICS
+
+
+@dataclasses.dataclass
+class Roofline:
+    chips: int
+    flops_global: float
+    bytes_global: float
+    coll_bytes_global: float     # raw operand-byte convention (assignment)
+    coll_wire_global: float      # ring-algorithm estimate
+    collectives: dict[str, dict[str, float]]
+    hlo_flops_global: float = 0.0   # raw cost_analysis (while bodies once)
+    hlo_bytes_global: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_global / (self.chips * PEAK_FLOPS)
+
+    @property
+    def t_mem(self) -> float:
+        return self.bytes_global / (self.chips * HBM_BW)
+
+    @property
+    def t_coll(self) -> float:
+        return self.coll_bytes_global / (self.chips * LINK_BW)
+
+    @property
+    def t_coll_wire(self) -> float:
+        return self.coll_wire_global / (self.chips * LINK_BW)
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_mem,
+            "collective": max(self.t_coll, self.t_coll_wire),
+        }
+        return max(terms, key=terms.get)
+
+    def to_dict(self) -> dict[str, Any]:
+        return {
+            "chips": self.chips,
+            "flops_global": self.flops_global,
+            "bytes_global": self.bytes_global,
+            "coll_bytes_global": self.coll_bytes_global,
+            "coll_wire_global": self.coll_wire_global,
+            "t_compute_s": self.t_compute,
+            "t_mem_s": self.t_mem,
+            "t_coll_s": self.t_coll,
+            "t_coll_wire_s": self.t_coll_wire,
+            "dominant": self.dominant,
+            "hlo_flops_global": self.hlo_flops_global,
+            "hlo_bytes_global": self.hlo_bytes_global,
+            "collectives": self.collectives,
+        }
+
+
+def analyze(
+    compiled,
+    mesh,
+    chips: int,
+    trip_hints: tuple[int, ...] = (),
+    analytic_flops: float | None = None,
+    analytic_bytes: float | None = None,
+) -> Roofline:
+    sem = calibrate_cost_semantics(mesh)
+    ca = compiled.cost_analysis()
+    ca = ca[0] if isinstance(ca, (list, tuple)) else (ca or {})
+    hlo_flops = float(ca.get("flops", 0.0)) * sem["flops_scale_to_global"]
+    hlo_bytes = float(ca.get("bytes accessed", 0.0)) * sem["flops_scale_to_global"]
+    # HloCostAnalysis counts while bodies once -> prefer the analytic model
+    # for scanned modules (hlo_* kept as cross-check fields).
+    flops = analytic_flops if analytic_flops else hlo_flops
+    hbm = analytic_bytes if analytic_bytes else hlo_bytes
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = ""
+    colls = parse_collectives(hlo, trip_hints)
+    # HLO shapes are per-device -> multiply by chips for global bytes
+    coll_raw = sum(c["operand_bytes"] for c in colls.values()) * chips
+    coll_wire = sum(c["wire_bytes"] for c in colls.values()) * chips
+    r = Roofline(
+        chips=chips,
+        flops_global=flops,
+        bytes_global=hbm,
+        coll_bytes_global=coll_raw,
+        coll_wire_global=coll_wire,
+        collectives=colls,
+    )
+    r.hlo_flops_global = hlo_flops
+    r.hlo_bytes_global = hlo_bytes
+    return r
+
+
+def model_flops(cfg, tokens: int) -> dict[str, float]:
+    total, active = cfg.param_count()
+    return {
+        "model_flops_6ND": 6.0 * total * tokens,
+        "model_flops_6NactiveD": 6.0 * active * tokens,
+    }

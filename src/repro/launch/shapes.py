@@ -1,0 +1,88 @@
+"""Assigned input shapes and the (arch x shape) cell matrix.
+
+``input_specs`` builds ShapeDtypeStruct stand-ins for every model input —
+weak-type-correct, shardable, zero allocation — the dry-run contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as configs
+from repro.models import init_cache, init_params
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode | long
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "long"),
+}
+
+
+def cell_matrix() -> list[tuple[str, str, str]]:
+    """All 40 (arch, shape, status) cells; status 'run' or a skip reason."""
+    out = []
+    for arch in configs.ARCHS:
+        cfg = configs.get(arch)
+        for sname in SHAPES:
+            if sname == "long_500k" and not cfg.subquadratic:
+                out.append((arch, sname, "skip: pure full-attention at 512k"))
+            else:
+                out.append((arch, sname, "run"))
+    return out
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs_struct(cfg: ModelConfig, sh: ShapeSpec) -> dict[str, Any]:
+    """Training/prefill batch ShapeDtypeStructs."""
+    B, S = sh.global_batch, sh.seq_len
+    batch: dict[str, Any] = {}
+    if cfg.frontend == "embed":
+        batch["embeds"] = _sds((B, S, cfg.d_model), jnp.bfloat16)
+    else:
+        batch["tokens"] = _sds((B, S), jnp.int32)
+    if cfg.encoder_layers:
+        batch["frames"] = _sds((B, S, cfg.d_model), jnp.bfloat16)
+    batch["labels"] = _sds((B, S), jnp.int32)
+    return batch
+
+
+def params_struct(cfg: ModelConfig):
+    return jax.eval_shape(lambda k: init_params(k, cfg), jax.random.PRNGKey(0))
+
+
+def cache_struct(cfg: ModelConfig, B: int, max_seq: int):
+    return jax.eval_shape(lambda: init_cache(cfg, B, max_seq))
+
+
+def decode_inputs_struct(cfg: ModelConfig, sh: ShapeSpec) -> dict[str, Any]:
+    """serve_step inputs: cache holds seq_len-1 tokens, one new token in."""
+    B, S = sh.global_batch, sh.seq_len
+    d: dict[str, Any] = {
+        "cache": cache_struct(cfg, B, S),
+        "pos": _sds((B,), jnp.int32),
+        "xi": _sds((B,), jnp.float32),
+    }
+    if cfg.frontend == "embed":
+        d["token"] = _sds((B, 1, cfg.d_model), jnp.bfloat16)
+    else:
+        d["token"] = _sds((B,), jnp.int32)
+    if cfg.encoder_layers:
+        d["enc_out"] = _sds((B, S, cfg.d_model), jnp.bfloat16)
+    return d

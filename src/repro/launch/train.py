@@ -1,0 +1,45 @@
+"""Production training launcher.
+
+On a real cluster every host runs this entry point under `jax.distributed`
+(same SPMD program; checkpoints on shared storage give pod-failure recovery
+via auto-resume, see repro/ckpt). On this container it runs the same loop on
+the local device. Policy defaults to `Policy.recommended` (EXPERIMENTS §Perf
+presets).
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b --preset reduced --steps 50
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--preset", default="reduced", choices=["reduced", "full"])
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--remat", default="none")
+    args = ap.parse_args()
+
+    import repro.configs as C
+    from repro.train import TrainConfig, Trainer
+
+    cfg = C.get(args.arch) if args.preset == "full" else C.get_reduced(args.arch)
+    tc = TrainConfig(
+        steps=args.steps,
+        global_batch=args.batch,
+        seq_len=args.seq,
+        ckpt_dir=args.ckpt or f"checkpoints/{C.canonical(args.arch)}_{args.preset}",
+        remat=args.remat,
+        microbatches=args.microbatches,
+    )
+    out = Trainer(cfg, tc).run()
+    print(f"done: final loss {out['final_loss']}")
+
+
+if __name__ == "__main__":
+    main()

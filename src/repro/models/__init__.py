@@ -1,0 +1,20 @@
+from .config import ModelConfig, reduced
+from .model import (
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    loss_fn,
+    prefill,
+)
+
+__all__ = [
+    "ModelConfig",
+    "reduced",
+    "decode_step",
+    "forward",
+    "init_cache",
+    "init_params",
+    "loss_fn",
+    "prefill",
+]

@@ -1,0 +1,426 @@
+"""Unified LM: assembles attention / mamba / mLSTM / sLSTM blocks with dense
+or MoE MLPs into a scanned super-block stack, plus optional encoder stack
+(Whisper) and embedding frontends (VLM/audio stubs).
+
+Layers are stacked over the super-block period and iterated with
+``jax.lax.scan`` so HLO size (and 512-device SPMD partitioning time) is
+independent of depth; remat wraps the scan body.
+
+Three entry points used by the runtime:
+  * ``forward``      — full-sequence logits (training / eval)
+  * ``prefill``      — full-sequence + returns decode caches
+  * ``decode_step``  — one token through the cached stack
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import hints as H
+
+from . import layers as L
+from . import moe as M
+from . import ssm as S
+from . import xlstm as X
+from .config import ModelConfig
+
+Params = dict[str, Any]
+
+
+def _dtype(cfg: ModelConfig):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+
+
+# ------------------------------------------------------------------ params
+
+
+def _init_block(key, cfg: ModelConfig, kind: str) -> Params:
+    if kind == "attn":
+        return L.init_attention(key, cfg)
+    if kind == "mamba":
+        return S.init_mamba(key, cfg)
+    if kind == "mlstm":
+        return X.init_mlstm(key, cfg)
+    if kind == "slstm":
+        return X.init_slstm(key, cfg)
+    raise ValueError(kind)
+
+
+def _init_mlp(key, cfg: ModelConfig, kind: str) -> Params:
+    if kind == "dense":
+        return L.init_mlp(key, cfg.d_model, cfg.d_ff)
+    if kind == "moe":
+        return M.init_moe(key, cfg)
+    return {}
+
+
+def _init_period(key, cfg: ModelConfig) -> Params:
+    p: Params = {}
+    n = len(cfg.block_pattern)
+    ks = jax.random.split(key, 4 * n)
+    for i, kind in enumerate(cfg.block_pattern):
+        p[f"b{i}"] = _init_block(ks[4 * i], cfg, kind)
+        p[f"ln_b{i}"] = L.init_rmsnorm(cfg.d_model)
+        mk = cfg.mlp_pattern[i % len(cfg.mlp_pattern)]
+        if mk != "none":
+            p[f"m{i}"] = _init_mlp(ks[4 * i + 1], cfg, mk)
+            p[f"ln_m{i}"] = L.init_rmsnorm(cfg.d_model)
+        if cfg.cross_attention and kind == "attn":
+            p[f"x{i}"] = L.init_cross_attention(ks[4 * i + 2], cfg)
+            p[f"ln_x{i}"] = L.init_rmsnorm(cfg.d_model)
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 8)
+    p: Params = {}
+    if cfg.frontend != "embed":
+        p["embed"] = L._init(ks[0], (cfg.vocab, cfg.d_model), scale=0.02)
+    # stacked decoder periods
+    period_keys = jax.random.split(ks[1], cfg.n_periods)
+    p["layers"] = jax.vmap(lambda k: _init_period(k, cfg))(period_keys)
+    if cfg.encoder_layers:
+        enc_keys = jax.random.split(ks[2], cfg.encoder_layers)
+        enc_cfg = cfg  # same dims
+        p["encoder"] = jax.vmap(
+            lambda k: {
+                "attn": L.init_attention(k, enc_cfg),
+                "ln_a": L.init_rmsnorm(cfg.d_model),
+                "mlp": L.init_mlp(k, cfg.d_model, cfg.d_ff),
+                "ln_m": L.init_rmsnorm(cfg.d_model),
+            }
+        )(enc_keys)
+        p["enc_norm"] = L.init_rmsnorm(cfg.d_model)
+    p["final_norm"] = L.init_rmsnorm(cfg.d_model)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L._init(ks[3], (cfg.d_model, cfg.vocab), scale=0.02)
+    return p
+
+
+# ----------------------------------------------------------------- encoder
+
+
+def encode(params: Params, cfg: ModelConfig, frames: jax.Array) -> jax.Array:
+    """Bidirectional encoder over stub frame embeddings (B, S_enc, D)."""
+    x = frames.astype(_dtype(cfg))
+    B, Senc, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(Senc)[None], (B, Senc))
+
+    def body(x, lp):
+        lp = H.gather_params(lp)
+        h = L.rmsnorm(lp["ln_a"], x, cfg.norm_eps)
+        x = x + L.attention(lp["attn"], cfg, h, pos, causal=False)
+        h = L.rmsnorm(lp["ln_m"], x, cfg.norm_eps)
+        x = x + L.mlp(lp["mlp"], h)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return L.rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+# ----------------------------------------------------------------- forward
+
+
+def _period_forward(cfg: ModelConfig, pp: Params, x, pos, enc_out):
+    aux = jnp.zeros((), jnp.float32)
+    pp = H.gather_params(pp)   # ZeRO-3 gather-on-use (no-op without hints)
+    x = H.act_seq(x)           # Megatron-SP residual (no-op without hints)
+    for i, kind in enumerate(cfg.block_pattern):
+        h = L.rmsnorm(pp[f"ln_b{i}"], x, cfg.norm_eps)
+        if kind == "attn":
+            y = L.attention(pp[f"b{i}"], cfg, h, pos, causal=cfg.causal)
+        elif kind == "mamba":
+            y = S.mamba(pp[f"b{i}"], cfg, h)
+        elif kind == "mlstm":
+            y = X.mlstm(pp[f"b{i}"], cfg, h)
+        else:
+            y = X.slstm(pp[f"b{i}"], cfg, h)
+        x = x + y
+        if cfg.cross_attention and kind == "attn":
+            h = L.rmsnorm(pp[f"ln_x{i}"], x, cfg.norm_eps)
+            kv = L.encoder_kv(pp[f"x{i}"], cfg, enc_out)
+            x = x + L.cross_attention(pp[f"x{i}"], cfg, h, kv)
+        mk = cfg.mlp_pattern[i % len(cfg.mlp_pattern)]
+        if mk == "dense":
+            h = L.rmsnorm(pp[f"ln_m{i}"], x, cfg.norm_eps)
+            x = x + L.mlp(pp[f"m{i}"], h)
+        elif mk == "moe":
+            h = L.rmsnorm(pp[f"ln_m{i}"], x, cfg.norm_eps)
+            y, a = M.moe(pp[f"m{i}"], cfg, h)
+            x = x + y
+            aux = aux + a
+    return x, aux
+
+
+def _embed_in(params, cfg: ModelConfig, batch) -> jax.Array:
+    if cfg.frontend == "embed":
+        return batch["embeds"].astype(_dtype(cfg))
+    tok = batch["tokens"]
+    return params["embed"].astype(_dtype(cfg))[tok]
+
+
+def _head(params, cfg: ModelConfig, x) -> jax.Array:
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        # keep the *embed* rule (V->tp, D gathered), then transpose
+        w = H.gather_params({"embed": params["embed"]})["embed"].T
+    else:
+        w = H.gather_params({"lm_head": params["lm_head"]})["lm_head"]
+    return jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype))
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "remat"))
+def forward(params: Params, cfg: ModelConfig, batch: dict, remat: str = "none"):
+    """Full-sequence logits (B, S, V) + aux losses."""
+    x = _embed_in(params, cfg, batch)
+    B, Sq, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(Sq)[None], (B, Sq))
+    enc_out = (
+        encode(params, cfg, batch["frames"]) if cfg.encoder_layers else None
+    )
+
+    def body(carry, pp):
+        x, aux = carry
+        x, a = _period_forward(cfg, pp, x, pos, enc_out)
+        return (x, aux + a), None
+
+    if remat == "full":
+        body = jax.checkpoint(body, prevent_cse=False)
+    elif remat == "dots":
+        body = jax.checkpoint(
+            body,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+            prevent_cse=False,
+        )
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), params["layers"])
+    return _head(params, cfg, x), aux
+
+
+def loss_fn(params, cfg: ModelConfig, batch, remat: str = "none"):
+    logits, aux = forward(params, cfg, batch, remat)
+    labels = batch["labels"]
+    lg = logits[:, :-1].astype(jnp.float32)
+    tg = labels[:, 1:]
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    picked = jnp.take_along_axis(lg, tg[..., None], axis=-1)[..., 0]
+    mask = (tg >= 0).astype(jnp.float32)
+    nll = jnp.sum((lse - picked) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return nll + 0.01 * aux, {"nll": nll, "aux": aux}
+
+
+# ------------------------------------------------------------------ decode
+
+
+def init_cache(cfg: ModelConfig, B: int, max_seq: int) -> dict:
+    dt = _dtype(cfg)
+
+    def one_period(_):
+        c = {}
+        for i, kind in enumerate(cfg.block_pattern):
+            if kind == "attn":
+                c[f"b{i}"] = {
+                    "k": jnp.zeros((B, max_seq, cfg.n_kv_heads, cfg.hd), dt),
+                    "v": jnp.zeros((B, max_seq, cfg.n_kv_heads, cfg.hd), dt),
+                    "len": jnp.zeros((), jnp.int32),
+                }
+            elif kind == "mamba":
+                c[f"b{i}"] = S.mamba_init_cache(cfg, B, dt)
+            elif kind == "mlstm":
+                c[f"b{i}"] = X.mlstm_init_cache(cfg, B, dt)
+            else:
+                c[f"b{i}"] = X.slstm_init_cache(cfg, B, dt)
+        return c
+
+    caches = [one_period(i) for i in range(cfg.n_periods)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def decode_step(params: Params, cfg: ModelConfig, cache, token, pos, enc_out=None):
+    """token (B,) int32 (or embeds (B,1,D)), pos (B,) int32 -> (logits (B,V), cache)."""
+    if cfg.frontend == "embed" and token.ndim == 3:
+        x = token.astype(_dtype(cfg))
+    else:
+        x = params["embed"].astype(_dtype(cfg))[token][:, None]
+
+    def body(x, xs):
+        pp, pc = xs
+        pp = H.gather_params(pp)
+        nc = {}
+        for i, kind in enumerate(cfg.block_pattern):
+            h = L.rmsnorm(pp[f"ln_b{i}"], x, cfg.norm_eps)
+            if kind == "attn":
+                y, nc[f"b{i}"] = L.attention_decode(pp[f"b{i}"], cfg, h, pc[f"b{i}"], pos)
+            elif kind == "mamba":
+                y, nc[f"b{i}"] = S.mamba_decode(pp[f"b{i}"], cfg, h, pc[f"b{i}"])
+            elif kind == "mlstm":
+                y, nc[f"b{i}"] = X.mlstm_decode(pp[f"b{i}"], cfg, h, pc[f"b{i}"])
+            else:
+                y, nc[f"b{i}"] = X.slstm_decode(pp[f"b{i}"], cfg, h, pc[f"b{i}"])
+            x = x + y
+            if cfg.cross_attention and kind == "attn":
+                h = L.rmsnorm(pp[f"ln_x{i}"], x, cfg.norm_eps)
+                kv = L.encoder_kv(pp[f"x{i}"], cfg, enc_out)
+                x = x + L.cross_attention(pp[f"x{i}"], cfg, h, kv)
+            mk = cfg.mlp_pattern[i % len(cfg.mlp_pattern)]
+            if mk == "dense":
+                h = L.rmsnorm(pp[f"ln_m{i}"], x, cfg.norm_eps)
+                x = x + L.mlp(pp[f"m{i}"], h)
+            elif mk == "moe":
+                h = L.rmsnorm(pp[f"ln_m{i}"], x, cfg.norm_eps)
+                y, _ = M.moe(pp[f"m{i}"], cfg, h)
+                x = x + y
+        return x, nc
+
+    x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+    logits = _head(params, cfg, x)[:, 0]
+    return logits, new_cache
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "max_seq"))
+def prefill(params: Params, cfg: ModelConfig, batch: dict, max_seq: int):
+    """Run the prompt, return (last-position logits, decode cache, enc_out)."""
+    x = _embed_in(params, cfg, batch)
+    B, Sq, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(Sq)[None], (B, Sq))
+    enc_out = (
+        encode(params, cfg, batch["frames"]) if cfg.encoder_layers else None
+    )
+    cache = init_cache(cfg, B, max_seq)
+
+    def body(carry, xs):
+        x = carry
+        pp, pc = xs
+        pp = H.gather_params(pp)
+        nc = dict(pc)
+        for i, kind in enumerate(cfg.block_pattern):
+            h = L.rmsnorm(pp[f"ln_b{i}"], x, cfg.norm_eps)
+            if kind == "attn":
+                q, k, v = L._qkv(pp[f"b{i}"], cfg, h, pos, rope=True)
+                y = L._sdpa(q, k, v, cfg, causal=cfg.causal)
+                y = jnp.einsum("bshk,hkd->bsd", y, pp[f"b{i}"]["wo"].astype(x.dtype))
+                ck = jax.lax.dynamic_update_slice_in_dim(
+                    pc[f"b{i}"]["k"], k.astype(pc[f"b{i}"]["k"].dtype), 0, axis=1)
+                cv = jax.lax.dynamic_update_slice_in_dim(
+                    pc[f"b{i}"]["v"], v.astype(pc[f"b{i}"]["v"].dtype), 0, axis=1)
+                nc[f"b{i}"] = {"k": ck, "v": cv, "len": jnp.int32(Sq)}
+            elif kind == "mamba":
+                y, nc[f"b{i}"] = _mamba_prefill(pp[f"b{i}"], cfg, h)
+            elif kind == "mlstm":
+                y, nc[f"b{i}"] = _mlstm_prefill(pp[f"b{i}"], cfg, h)
+            else:
+                y, nc[f"b{i}"] = _slstm_prefill(pp[f"b{i}"], cfg, h)
+            x = x + y
+            if cfg.cross_attention and kind == "attn":
+                h = L.rmsnorm(pp[f"ln_x{i}"], x, cfg.norm_eps)
+                kv = L.encoder_kv(pp[f"x{i}"], cfg, enc_out)
+                x = x + L.cross_attention(pp[f"x{i}"], cfg, h, kv)
+            mk = cfg.mlp_pattern[i % len(cfg.mlp_pattern)]
+            if mk == "dense":
+                h = L.rmsnorm(pp[f"ln_m{i}"], x, cfg.norm_eps)
+                x = x + L.mlp(pp[f"m{i}"], h)
+            elif mk == "moe":
+                h = L.rmsnorm(pp[f"ln_m{i}"], x, cfg.norm_eps)
+                y, _ = M.moe(pp[f"m{i}"], cfg, h)
+                x = x + y
+        return x, nc
+
+    x, cache = jax.lax.scan(body, x, (params["layers"], cache))
+    logits = _head(params, cfg, x[:, -1:])[:, 0]
+    return logits, cache, enc_out
+
+
+def _mamba_prefill(p, cfg, x):
+    """Sequence forward that also returns the final recurrent state by
+    replaying the last token through the recurrence (cheap, exact)."""
+    y = S.mamba(p, cfg, x)
+    # state: run the associative scan pieces once more to get h_S & window
+    B, Sq, _ = x.shape
+    cache = S.mamba_init_cache(cfg, B, x.dtype)
+    # recompute final ssm state via a single pass over the last K tokens is
+    # NOT exact for h; do the exact thing: step the recurrence over the
+    # sequence with a scan (state-only, no outputs materialized).
+    DI = cfg.ssm_expand * cfg.d_model
+    N = cfg.ssm_state
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype))
+    xi, _ = jnp.split(xz, 2, axis=-1)
+    K = cfg.ssm_conv
+    pad = jnp.pad(xi, ((0, 0), (K - 1, 0), (0, 0)))
+    conv = sum(pad[:, k : k + Sq, :] * p["conv"][k].astype(x.dtype) for k in range(K))
+    u = jax.nn.silu(conv)
+    proj = jnp.einsum("bsi,ie->bse", u, p["x_proj"].astype(x.dtype)).astype(jnp.float32)
+    Bm, dt = proj[..., :N], proj[..., -1:]
+    dt = jax.nn.softplus(dt + p["dt_bias"])
+    A = -jnp.exp(p["a_log"])
+    uf = u.astype(jnp.float32)
+    a = jnp.exp(dt[..., None] * A[None, None])
+    bx = (dt[..., None] * Bm[:, :, None, :]) * uf[..., None]
+
+    def step(h, xs):
+        at, bt = xs
+        return at * h + bt, None
+
+    h, _ = jax.lax.scan(
+        step, jnp.zeros((B, DI, N), jnp.float32),
+        (a.transpose(1, 0, 2, 3), bx.transpose(1, 0, 2, 3)),
+    )
+    cache = {"conv": pad[:, Sq:, :], "h": h}  # last K-1 inputs
+    return y, cache
+
+
+def _mlstm_prefill(p, cfg, x):
+    y = X.mlstm(p, cfg, x)
+    # exact final state via stepwise scan (state only)
+    B, Sq, D = x.shape
+    H = cfg.n_heads
+    up = jnp.einsum("bsd,de->bse", x, p["up"].astype(x.dtype))
+    xin, _ = jnp.split(up, 2, axis=-1)
+    DI = xin.shape[-1]
+    hd = DI // H
+    import numpy as np
+    q = jnp.einsum("bse,ef->bsf", xin, p["wq"].astype(x.dtype)).reshape(B, Sq, H, hd)
+    k = jnp.einsum("bse,ef->bsf", xin, p["wk"].astype(x.dtype)).reshape(B, Sq, H, hd) * (1.0 / float(np.sqrt(hd)))
+    v = jnp.einsum("bse,ef->bsf", xin, p["wv"].astype(x.dtype)).reshape(B, Sq, H, hd)
+    gates = (jnp.einsum("bse,eg->bsg", xin, p["wif"].astype(x.dtype)).astype(jnp.float32)
+             + p["if_bias"])
+    li = jnp.minimum(gates[..., :H], 10.0)
+    f = jax.nn.sigmoid(gates[..., H:])
+
+    def step(carry, xs):
+        C, n = carry
+        kt, vt, it, ft = xs
+        C = C * ft[..., None, None] + it[..., None, None] * jnp.einsum(
+            "bhd,bhe->bhde", vt.astype(jnp.float32), kt.astype(jnp.float32))
+        n = n * ft[..., None] + it[..., None] * kt.astype(jnp.float32)
+        return (C, n), None
+
+    (C, n), _ = jax.lax.scan(
+        step,
+        (jnp.zeros((B, H, hd, hd), jnp.float32), jnp.zeros((B, H, hd), jnp.float32)),
+        (k.transpose(1, 0, 2, 3), v.transpose(1, 0, 2, 3),
+         jnp.exp(li).transpose(1, 0, 2), f.transpose(1, 0, 2)),
+    )
+    return y, {"C": C, "n": n}
+
+
+def _slstm_prefill(p, cfg, x):
+    y = X.slstm(p, cfg, x)
+    B, Sq, D = x.shape
+    H = cfg.n_heads
+    hd = D // H
+    wx = jnp.einsum("bsd,de->bse", x, p["wx"].astype(x.dtype))
+
+    def step(state, wx_t):
+        return X._slstm_cell(p, cfg, wx_t, state), None
+
+    init = (
+        jnp.zeros((B, H, hd), x.dtype),
+        jnp.zeros((B, H, hd), jnp.float32),
+        jnp.zeros((B, H, hd), jnp.float32),
+        jnp.full((B, H, hd), -1e30, jnp.float32),
+    )
+    (h, c, n, m), _ = jax.lax.scan(step, init, wx.transpose(1, 0, 2))
+    return y, {"h": h, "c": c, "n": n, "m": m}

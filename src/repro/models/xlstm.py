@@ -1,0 +1,242 @@
+"""xLSTM blocks: chunkwise-parallel mLSTM and recurrent sLSTM (xlstm-1.3b).
+
+mLSTM keeps a matrix memory C (H, hd, hd) with input/forget gating:
+    C_t = f_t C_{t-1} + i_t v_t k_t^T,  n_t = f_t n_{t-1} + i_t k_t
+    h_t = o_t * (q_t C_t) / max(|q_t . n_t|, 1)
+Training uses a chunkwise-parallel form (intra-chunk quadratic in chunk size,
+inter-chunk recurrent in log-forget space) — sub-quadratic in S, which is why
+this arch runs the long_500k shape. Forget gates are sigmoid (log f <= 0, so
+intra-chunk decay ratios never overflow); input gates exp-capped.
+
+sLSTM is the scalar-memory variant with exponential gating and the max-
+stabilizer m_t; it is inherently sequential -> lax.scan over time.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .layers import Params, _init
+
+
+# ------------------------------------------------------------------- mLSTM
+
+
+def init_mlstm(key, cfg: ModelConfig) -> Params:
+    D = cfg.d_model
+    DI = 2 * D
+    H = cfg.n_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "up": _init(ks[0], (D, 2 * DI)),
+        "wq": _init(ks[1], (DI, DI)),
+        "wk": _init(ks[2], (DI, DI)),
+        "wv": _init(ks[3], (DI, DI)),
+        "wif": _init(ks[4], (DI, 2 * H), scale=0.02),
+        "if_bias": jnp.concatenate(
+            [jnp.full((H,), -3.0), jnp.full((H,), 3.0)]  # i low, f high
+        ),
+        "down": _init(ks[6], (DI, D)),
+    }
+
+
+def _mlstm_chunk_scan(q, k, v, log_f, log_i, chunk: int):
+    """q/k/v (B, S, H, hd); log_f/log_i (B, S, H). Returns h (B, S, H, hd)."""
+    B, S, H, hd = q.shape
+    C = chunk
+    assert S % C == 0, (S, C)
+    nc = S // C
+    qc = q.reshape(B, nc, C, H, hd)
+    kc = k.reshape(B, nc, C, H, hd)
+    vc = v.reshape(B, nc, C, H, hd)
+    lf = log_f.reshape(B, nc, C, H).astype(jnp.float32)
+    li = log_i.reshape(B, nc, C, H).astype(jnp.float32)
+
+    F = jnp.cumsum(lf, axis=2)                  # within-chunk cumulative log f
+    Ftot = F[:, :, -1]                          # (B,nc,H)
+    # intra-chunk decay: D[j,t] = exp(F_j - F_t + li_t) for t <= j
+    decay = F[:, :, :, None, :] - F[:, :, None, :, :] + li[:, :, None, :, :]
+    mask = (jnp.arange(C)[:, None] >= jnp.arange(C)[None, :])[None, None, :, :, None]
+    intra = jnp.where(mask, jnp.exp(jnp.minimum(decay, 20.0)), 0.0)  # (B,nc,j,t,H)
+
+    qk = jnp.einsum("bnjhd,bnthd->bnjth", qc, kc).astype(jnp.float32)
+    w = qk * intra                              # (B,nc,j,t,H)
+    h_intra = jnp.einsum("bnjth,bnthd->bnjhd", w.astype(q.dtype), vc)
+    n_intra = jnp.einsum("bnjth,bnthd->bnjhd", w.astype(q.dtype), kc)
+
+    # Inter-chunk recurrent state over chunks (sequential scan over nc):
+    # Cc = exp(Ftot) C_prev + sum_t exp(Ftot - F_t + li_t) v_t k_t^T
+    gain = jnp.exp(jnp.minimum(Ftot[:, :, None, :] - F + li, 20.0))  # (B,nc,C,H)
+    dC = jnp.einsum("bnth,bnthd,bnthe->bnhde", gain.astype(q.dtype), vc, kc)
+    dn = jnp.einsum("bnth,bnthd->bnhd", gain.astype(q.dtype), kc)
+
+    def step(carry, xs):
+        Cst, nst = carry
+        dC_n, dn_n, ftot = xs
+        decay_c = jnp.exp(jnp.minimum(ftot, 0.0))[:, :, None, None]
+        Cn = Cst * decay_c.astype(Cst.dtype) + dC_n
+        nn = nst * decay_c[..., 0].astype(nst.dtype) + dn_n
+        return (Cn, nn), (Cst, nst)
+
+    C0 = jnp.zeros((B, H, hd, hd), q.dtype)
+    n0 = jnp.zeros((B, H, hd), q.dtype)
+    xs = (
+        dC.transpose(1, 0, 2, 3, 4),
+        dn.transpose(1, 0, 2, 3),
+        Ftot.transpose(1, 0, 2),
+    )
+    (_, _), (Cprev, nprev) = jax.lax.scan(step, (C0, n0), xs)
+    Cprev = Cprev.transpose(1, 0, 2, 3, 4)      # (B,nc,H,hd,hd) state entering chunk
+    nprev = nprev.transpose(1, 0, 2, 3)         # (B,nc,H,hd)
+
+    carry_w = jnp.exp(jnp.minimum(F, 0.0))      # exp(F_j) <= 1 (sigmoid forget)
+    h_inter = jnp.einsum("bnjh,bnjhd,bnhde->bnjhe",
+                         carry_w.astype(q.dtype), qc, Cprev)
+    n_inter = jnp.einsum("bnjh,bnjhd,bnhd->bnjh",
+                         carry_w.astype(q.dtype), qc, nprev)
+    qn = jnp.einsum("bnjhd,bnjhd->bnjh", qc, n_intra) + n_inter
+    denom = jnp.maximum(jnp.abs(qn.astype(jnp.float32)), 1.0)[..., None]
+    h = (h_intra + h_inter).astype(jnp.float32) / denom
+    return h.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def mlstm(p: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    B, S, D = x.shape
+    H = cfg.n_heads
+    up = jnp.einsum("bsd,de->bse", x, p["up"].astype(x.dtype))
+    xin, z = jnp.split(up, 2, axis=-1)
+    DI = xin.shape[-1]
+    hd = DI // H
+    q = jnp.einsum("bse,ef->bsf", xin, p["wq"].astype(x.dtype)).reshape(B, S, H, hd)
+    k = jnp.einsum("bse,ef->bsf", xin, p["wk"].astype(x.dtype)).reshape(B, S, H, hd)
+    # fold 1/sqrt(hd) into k (consistent intra/inter/decode); python-float
+    # scalar stays weakly typed so bf16 activations are not promoted
+    k = k * (1.0 / float(np.sqrt(hd)))
+    v = jnp.einsum("bse,ef->bsf", xin, p["wv"].astype(x.dtype)).reshape(B, S, H, hd)
+    gates = jnp.einsum("bse,eg->bsg", xin, p["wif"].astype(x.dtype)).astype(jnp.float32)
+    gates = gates + p["if_bias"]
+    log_i = jnp.minimum(gates[..., :H], 10.0)           # exp input gate, capped
+    log_f = jax.nn.log_sigmoid(gates[..., H:])          # sigmoid forget gate
+    chunk = min(cfg.mlstm_chunk, S)
+    while S % chunk:
+        chunk -= 1
+    h = _mlstm_chunk_scan(q, k, v, log_f, log_i, chunk)
+    h = h.reshape(B, S, DI) * jax.nn.silu(z)
+    return jnp.einsum("bse,ed->bsd", h, p["down"].astype(x.dtype))
+
+
+def mlstm_init_cache(cfg: ModelConfig, B: int, dtype) -> dict:
+    H = cfg.n_heads
+    hd = 2 * cfg.d_model // H
+    return {
+        "C": jnp.zeros((B, H, hd, hd), jnp.float32),
+        "n": jnp.zeros((B, H, hd), jnp.float32),
+    }
+
+
+def mlstm_decode(p: Params, cfg: ModelConfig, x: jax.Array, cache: dict):
+    B = x.shape[0]
+    H = cfg.n_heads
+    up = jnp.einsum("bsd,de->bse", x, p["up"].astype(x.dtype))
+    xin, z = jnp.split(up, 2, axis=-1)
+    DI = xin.shape[-1]
+    hd = DI // H
+    proj = lambda w: jnp.einsum("bse,ef->bsf", xin, w.astype(x.dtype)).reshape(B, H, hd)
+    q, k, v = proj(p["wq"]), proj(p["wk"]), proj(p["wv"])
+    gates = jnp.einsum("bse,eg->bsg", xin, p["wif"].astype(x.dtype)).astype(jnp.float32)
+    gates = (gates + p["if_bias"])[:, 0]
+    i = jnp.exp(jnp.minimum(gates[..., :H], 10.0))
+    f = jax.nn.sigmoid(gates[..., H:])
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32) / np.sqrt(hd)
+    vf = v.astype(jnp.float32)
+    C = cache["C"] * f[..., None, None] + i[..., None, None] * jnp.einsum(
+        "bhd,bhe->bhde", vf, kf
+    )
+    n = cache["n"] * f[..., None] + i[..., None] * kf
+    num = jnp.einsum("bhde,bhe->bhd", C, qf)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, qf))[..., None], 1.0)
+    h = (num / den).reshape(B, 1, DI).astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", h, p["down"].astype(x.dtype))
+    return out, {"C": C, "n": n}
+
+
+# ------------------------------------------------------------------- sLSTM
+
+
+def init_slstm(key, cfg: ModelConfig) -> Params:
+    D = cfg.d_model
+    H = cfg.n_heads
+    hd = D // H
+    ks = jax.random.split(key, 4)
+    return {
+        "wx": _init(ks[0], (D, 4 * D)),
+        "r": _init(ks[1], (H, hd, 4 * hd), scale=0.3 / np.sqrt(hd)),
+        "bias": jnp.zeros((4 * D,), jnp.float32)
+        .at[2 * D : 3 * D].set(1.0),   # forget bias
+        "down": _init(ks[2], (D, D)),
+    }
+
+
+def _slstm_cell(p, cfg, wx_t, state):
+    """wx_t (B, 4D) precomputed input proj; state (h, c, n, m) each (B,H,hd)."""
+    h, c, n, m = state
+    B = wx_t.shape[0]
+    H = cfg.n_heads
+    D = cfg.d_model
+    hd = D // H
+    rec = jnp.einsum("bhd,hde->bhe", h, p["r"].astype(h.dtype))   # (B,H,4hd)
+    z = wx_t.reshape(B, H, 4 * hd) + rec
+    z = z.astype(jnp.float32) + p["bias"].reshape(H, 4 * hd)
+    zi, zz, zf, zo = jnp.split(z, 4, axis=-1)
+    m_new = jnp.maximum(zf + m, zi)
+    i = jnp.exp(zi - m_new)
+    f = jnp.exp(zf + m - m_new)
+    c_new = f * c + i * jnp.tanh(zz)
+    n_new = f * n + i
+    h_new = jax.nn.sigmoid(zo) * c_new / jnp.maximum(n_new, 1.0)
+    return (h_new.astype(h.dtype), c_new, n_new, m_new)
+
+
+def slstm(p: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    B, S, D = x.shape
+    H = cfg.n_heads
+    hd = D // H
+    wx = jnp.einsum("bsd,de->bse", x, p["wx"].astype(x.dtype))
+
+    def step(state, wx_t):
+        new = _slstm_cell(p, cfg, wx_t, state)
+        return new, new[0]
+
+    init = (
+        jnp.zeros((B, H, hd), x.dtype),
+        jnp.zeros((B, H, hd), jnp.float32),
+        jnp.zeros((B, H, hd), jnp.float32),
+        jnp.full((B, H, hd), -1e30, jnp.float32),
+    )
+    _, hs = jax.lax.scan(step, init, wx.transpose(1, 0, 2))
+    y = hs.transpose(1, 0, 2, 3).reshape(B, S, D)
+    return jnp.einsum("bsd,de->bse", y, p["down"].astype(x.dtype))
+
+
+def slstm_init_cache(cfg: ModelConfig, B: int, dtype) -> dict:
+    H = cfg.n_heads
+    hd = cfg.d_model // H
+    return {
+        "h": jnp.zeros((B, H, hd), dtype),
+        "c": jnp.zeros((B, H, hd), jnp.float32),
+        "n": jnp.zeros((B, H, hd), jnp.float32),
+        "m": jnp.full((B, H, hd), -1e30, jnp.float32),
+    }
+
+
+def slstm_decode(p: Params, cfg: ModelConfig, x: jax.Array, cache: dict):
+    wx = jnp.einsum("bsd,de->bse", x, p["wx"].astype(x.dtype))[:, 0]
+    state = (cache["h"], cache["c"], cache["n"], cache["m"])
+    h, c, n, m = _slstm_cell(p, cfg, wx, state)
+    B = x.shape[0]
+    y = h.reshape(B, 1, cfg.d_model)
+    out = jnp.einsum("bsd,de->bse", y, p["down"].astype(x.dtype))
+    return out, {"h": h, "c": c, "n": n, "m": m}

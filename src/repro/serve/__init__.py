@@ -1,0 +1,4 @@
+from .engine import Request, ServeEngine
+from .sampler import QmcStreams, TokenSampler
+
+__all__ = ["Request", "ServeEngine", "QmcStreams", "TokenSampler"]

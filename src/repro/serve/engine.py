@@ -1,0 +1,117 @@
+"""Serving engine: continuous batching over a fixed slot pool.
+
+Requests queue in; free slots prefill (one request at a time here — the
+multi-pod path shards prefill over the mesh) and then join the batched
+decode step. Each decode step runs the whole slot pool through
+``decode_step`` + the radix-CDF sampler; finished slots (EOS/max-len) are
+recycled. KV caches live per-slot and are scatter-updated in the batch
+dimension — the CPU-scale stand-in for paged attention.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.models import decode_step, init_cache, prefill
+from repro.models.config import ModelConfig
+
+from .sampler import TokenSampler
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray
+    max_new: int = 32
+    eos: int | None = None
+    out: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, params: Any, cfg: ModelConfig, n_slots: int = 8,
+                 max_seq: int = 512, sampler: TokenSampler | None = None):
+        self.params = params
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        self.sampler = sampler or TokenSampler(n_slots=n_slots, use_pallas=False)
+        self.queue: deque[Request] = deque()
+        self.slots: list[Request | None] = [None] * n_slots
+        self.cache = init_cache(cfg, n_slots, max_seq)
+        self.pos = np.zeros(n_slots, np.int32)
+        self.last_tok = np.zeros(n_slots, np.int32)
+        self.steps = 0
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for s in range(self.n_slots):
+            if self.slots[s] is None and self.queue:
+                req = self.queue.popleft()
+                self.slots[s] = req
+                # prefill this request alone, then splice its cache into the
+                # slot position of the batched cache
+                batch = {"tokens": jnp.asarray(req.prompt[None, :], jnp.int32)}
+                logits, cache1, _ = prefill(
+                    self.params, self.cfg, batch, max_seq=self.max_seq
+                )
+                tok = self.sampler.sample(logits, np.array([s]))[0]
+
+                def splice(big, one):
+                    # leaves without a slot dim (e.g. stacked 'len' counters)
+                    if one.ndim < 2 or big.shape[1] != self.n_slots:
+                        return big
+                    return big.at[:, s].set(one[:, 0])
+
+                self.cache = jax.tree.map(splice, self.cache, cache1)
+                self.pos[s] = len(req.prompt)
+                self.last_tok[s] = tok
+                req.out.append(int(tok))
+
+    def _retire(self) -> None:
+        for s, req in enumerate(self.slots):
+            if req is None:
+                continue
+            if (
+                len(req.out) >= req.max_new
+                or (req.eos is not None and req.out and req.out[-1] == req.eos)
+                or self.pos[s] >= self.max_seq - 1
+            ):
+                req.done = True
+                self.slots[s] = None
+
+    def step(self) -> None:
+        self._admit()
+        active = [s for s, r in enumerate(self.slots) if r is not None]
+        if not active:
+            return
+        # attention_decode scatters at per-row pos, so idle slots simply
+        # overwrite their own stale cell; only active slots are read out.
+        logits, new_cache = decode_step(
+            self.params,
+            self.cfg,
+            self.cache,
+            jnp.asarray(self.last_tok),
+            jnp.asarray(self.pos),
+        )
+        self.cache = new_cache
+        act = np.asarray(active)
+        toks = self.sampler.sample(logits[act], act)
+        for i, s in enumerate(active):
+            tok = int(toks[i])
+            self.slots[s].out.append(tok)
+            self.last_tok[s] = tok
+            self.pos[s] += 1
+        self._retire()
+        self.steps += 1
+
+    def run(self, max_steps: int = 1000) -> None:
+        while (self.queue or any(self.slots)) and self.steps < max_steps:
+            self.step()

@@ -1,0 +1,74 @@
+"""Token samplers for serving: the paper's monotone inversion vs the Alias
+Method, with per-slot QMC uniform streams.
+
+Modes:
+  * ``inverse_qmc``  — fused softmax->CDF + tiled inverse (kernels), uniforms
+    from per-slot scrambled van-der-Corput streams. Monotone warp => the
+    stream's stratification survives (paper Sec. 3); best-of-n decode from
+    one distribution provably covers the distribution better (benchmark
+    ``benchmarks/serving_diversity.py``).
+  * ``inverse_rng``  — same mapping, PRNG uniforms (the MC baseline).
+  * ``alias``        — Walker/Vose per-row alias tables (serial build, non-
+    monotone mapping; the paper's antagonist, kept for comparison).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.alias import build_alias, sample_alias
+from repro.core.lds import radical_inverse_base2
+from repro.kernels import ops
+
+
+class QmcStreams:
+    """Per-slot low-discrepancy uniform streams with Cranley-Patterson
+    rotations (slot-hash offsets keep slots decorrelated but stratified)."""
+
+    def __init__(self, n_slots: int, seed: int = 0):
+        rng = np.random.default_rng(seed)
+        self.offsets = rng.random(n_slots).astype(np.float32)
+        self.counters = np.zeros(n_slots, np.uint32)
+
+    def next(self, slots: np.ndarray | None = None) -> np.ndarray:
+        if slots is None:
+            slots = np.arange(len(self.offsets))
+        xi = (
+            radical_inverse_base2(self.counters[slots]) + self.offsets[slots]
+        ) % 1.0
+        self.counters[slots] += 1
+        return xi.astype(np.float32)
+
+
+class TokenSampler:
+    def __init__(self, mode: str = "inverse_qmc", n_slots: int = 64,
+                 temperature: float = 1.0, seed: int = 0, use_pallas: bool = True):
+        assert mode in ("inverse_qmc", "inverse_rng", "alias")
+        self.mode = mode
+        self.temperature = temperature
+        self.streams = QmcStreams(n_slots, seed)
+        self.rng = np.random.default_rng(seed)
+        self.use_pallas = use_pallas
+
+    def uniforms(self, slots: np.ndarray) -> np.ndarray:
+        if self.mode == "inverse_qmc":
+            return self.streams.next(slots)
+        return self.rng.random(len(slots)).astype(np.float32)
+
+    def sample(self, logits: jax.Array, slots: np.ndarray) -> np.ndarray:
+        """logits (B, V) -> token ids (B,)."""
+        if self.mode == "alias":
+            p = np.asarray(jax.nn.softmax(logits / self.temperature, axis=-1))
+            out = np.empty(len(slots), np.int64)
+            for i in range(len(slots)):  # serial build per row — the point
+                t = build_alias(p[i])
+                xi = self.rng.random()
+                out[i] = int(np.asarray(sample_alias(t, jnp.float32(xi))))
+            return out.astype(np.int32)
+        xi = self.uniforms(slots)
+        cdf = ops.fused_cdf(
+            logits / self.temperature, softmax=True, use_pallas=self.use_pallas
+        )
+        idx = ops.sample_rows(cdf, jnp.asarray(xi)[:, None], use_pallas=self.use_pallas)
+        return np.asarray(idx)[:, 0]

@@ -1,0 +1,90 @@
+"""AdamW + cosine schedule, implemented from scratch as pytree transforms.
+
+Optimizer state shards exactly like the parameters (ZeRO: m/v inherit the
+FSDP+TP PartitionSpecs), so memory per device is (p + m + v) / n_shards.
+``opt_dtype='bfloat16'`` halves m/v for the trillion-parameter configs
+(documented memory/precision tradeoff in EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    opt_dtype: str = "float32"
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+def schedule(c: AdamWConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(step / jnp.maximum(c.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - c.warmup_steps) / jnp.maximum(c.total_steps - c.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return c.lr * warm * (c.min_lr_ratio + (1 - c.min_lr_ratio) * cos)
+
+
+def init_opt(c: AdamWConfig, params: Any) -> OptState:
+    dt = jnp.bfloat16 if c.opt_dtype == "bfloat16" else jnp.float32
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return OptState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+    )
+
+
+def global_norm(tree: Any) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def apply_updates(c: AdamWConfig, params: Any, grads: Any, st: OptState):
+    """One AdamW step; returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, c.grad_clip / jnp.maximum(gnorm, 1e-9))
+    step = st.step + 1
+    lr = schedule(c, step)
+    b1c = 1 - c.b1 ** step.astype(jnp.float32)
+    b2c = 1 - c.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = m.astype(jnp.float32) * c.b1 + g * (1 - c.b1)
+        v32 = v.astype(jnp.float32) * c.b2 + g * g * (1 - c.b2)
+        u = (m32 / b1c) / (jnp.sqrt(v32 / b2c) + c.eps)
+        decay = c.weight_decay * p.astype(jnp.float32) if p.ndim >= 2 else 0.0
+        newp = p.astype(jnp.float32) - lr * (u + decay)
+        return newp.astype(p.dtype), m32.astype(m.dtype), v32.astype(v.dtype)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(st.m)
+    flat_v = jax.tree.leaves(st.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_p, OptState(step, new_m, new_v), {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,104 @@
+"""Training driver: deterministic data, checkpoint/restart, failure injection.
+
+The restart contract: batches are pure functions of (seed, step) and the
+checkpoint stores (params, opt_state, step), so kill-at-any-step + resume
+reproduces the exact same trajectory — asserted bitwise in
+tests/test_fault_tolerance.py. This is the single-process core of the
+multi-pod story: on a real cluster every host runs this same loop under
+jax.distributed, checkpoints go to shared storage, and a failed pod rejoins
+by auto-resume (elastic re-shard handled by ckpt.restore's device_put).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from pathlib import Path
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt import CheckpointManager, latest_step
+from repro.data.mixture import MixtureSampler
+from repro.data.pipeline import make_batch
+from repro.models import init_params
+from repro.models.config import ModelConfig
+
+from .optimizer import AdamWConfig, init_opt
+from .step import make_train_step
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    global_batch: int = 8
+    seq_len: int = 64
+    seed: int = 0
+    ckpt_dir: str = "checkpoints/run"
+    ckpt_every: int = 25
+    keep: int = 3
+    log_every: int = 10
+    remat: str = "none"
+    microbatches: int = 1
+    mixture_weights: tuple = (0.5, 0.25, 0.125, 0.125)
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, tc: TrainConfig,
+                 oc: AdamWConfig | None = None,
+                 fail_at_step: int | None = None,
+                 log_fn: Callable[[str], None] = print):
+        self.cfg = cfg
+        self.tc = tc
+        self.oc = oc or AdamWConfig(total_steps=tc.steps, warmup_steps=max(tc.steps // 20, 1))
+        self.fail_at_step = fail_at_step
+        self.log = log_fn
+        self.mixture = MixtureSampler(tc.mixture_weights, seed=tc.seed)
+        self.step_fn = jax.jit(
+            make_train_step(cfg, self.oc, remat=tc.remat, microbatches=tc.microbatches),
+            donate_argnums=(0, 1),
+        )
+        self.mgr = CheckpointManager(tc.ckpt_dir, keep=tc.keep)
+
+    def init_state(self):
+        params = init_params(jax.random.PRNGKey(self.tc.seed), self.cfg)
+        opt = init_opt(self.oc, params)
+        return params, opt
+
+    def run(self) -> dict[str, Any]:
+        params, opt = self.init_state()
+        start = 0
+        if latest_step(self.tc.ckpt_dir) is not None:
+            (params, opt), start = self.mgr.restore_latest((params, opt))
+            start = int(np.asarray(opt.step))
+            self.log(f"resumed from step {start}")
+        metrics_hist = []
+        t0 = time.time()
+        for step in range(start, self.tc.steps):
+            if self.fail_at_step is not None and step == self.fail_at_step:
+                raise RuntimeError(f"injected failure at step {step}")
+            batch_np = make_batch(
+                self.cfg, step, self.tc.global_batch, self.tc.seq_len,
+                mixture=self.mixture, seed=self.tc.seed,
+            )
+            batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+            params, opt, m = self.step_fn(params, opt, batch)
+            if step % self.tc.log_every == 0 or step == self.tc.steps - 1:
+                loss = float(m["loss"])
+                self.log(
+                    f"step {step:5d} loss {loss:.4f} "
+                    f"gnorm {float(m['grad_norm']):.3f} "
+                    f"lr {float(m['lr']):.2e} "
+                    f"({(time.time() - t0):.1f}s)"
+                )
+                metrics_hist.append({"step": step, "loss": loss})
+            if (step + 1) % self.tc.ckpt_every == 0 or step == self.tc.steps - 1:
+                self.mgr.save((params, opt), step + 1)
+        self.mgr.wait()
+        return {
+            "params": params,
+            "opt": opt,
+            "metrics": metrics_hist,
+            "final_loss": metrics_hist[-1]["loss"] if metrics_hist else None,
+        }

@@ -1,0 +1,55 @@
+"""Benchmark harness smoke tests: every module runs end-to-end at tiny
+scale and reports sane values (deliverable-d wiring check)."""
+import numpy as np
+
+
+def test_table1_runs_and_beats_binary_on_hdr():
+    # paper-scale n: the forest win needs enough periods per guide cell
+    # (at n=128 the mod-64 distribution has only 2 periods and ties)
+    from benchmarks.table1 import run
+
+    rows = run(n=256, m=256, n_samples=1 << 13)
+    by = {(name, method): r for name, method, r in rows}
+    f = by[("(i mod 64 + 1)^35", "cutpoint+radix_forest")]["average_32"]
+    b = by[("(i mod 64 + 1)^35", "cutpoint+binary")]["average_32"]
+    assert f < b
+
+
+def test_convergence_inverse_beats_alias():
+    from benchmarks.convergence import run_1d, run_discrepancy
+
+    rows = run_1d(max_log2=12)
+    assert all(e_ali > e_inv for _, e_inv, e_ali in rows[-2:])
+    d = run_discrepancy(1024)
+    assert d["alias"] > 5 * d["inverse"]
+    assert abs(d["inverse"] - d["input"]) < 1e-6  # monotone warp preserves
+
+
+def test_convergence_2d_uses_multirow_forest():
+    from benchmarks.convergence import run_2d
+
+    rows = run_2d(max_log2=12, h=16, w=32)
+    assert all(np.isfinite(e) for _, e, _ in rows)
+
+
+def test_construction_bench_runs():
+    from benchmarks.construction import run
+
+    rows = run(sizes=(1 << 10,))
+    assert rows[0]["forest_us"] > 0 and rows[0]["alias_us"] > 0
+
+
+def test_throughput_bench_runs():
+    from benchmarks.sampling_throughput import run
+
+    rows = run(n=1 << 10, batch=1 << 12)
+    names = {r[0] for r in rows}
+    assert {"binary_search", "forest_alg2", "alias"} <= names
+
+
+def test_serving_diversity_qmc_wins():
+    from benchmarks.serving_diversity import run
+
+    rows = run(vocab=512, n=2048)
+    assert rows["inverse_qmc"] < rows["inverse_prng"]
+    assert rows["inverse_qmc"] < rows["alias_qmc"]

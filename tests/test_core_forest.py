@@ -1,0 +1,210 @@
+"""Property + unit tests for the radix-tree-forest core (paper Secs. 2-3)."""
+import hypothesis
+import hypothesis.strategies as st
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    build_cdf,
+    build_forest,
+    build_forest_apetrei,
+    build_forest_from_cdf,
+    depth_stats,
+    forest_to_numpy,
+    normalize_weights,
+    np_build_cdf,
+    np_sample_cutpoint_binary_counting,
+    np_sample_forest_counting,
+    sample_binary,
+    sample_cutpoint_binary,
+    sample_cutpoint_linear,
+    sample_forest,
+    sample_forest_with_stats,
+    sample_linear,
+    validate_forest,
+)
+
+settings = hypothesis.settings(max_examples=30, deadline=None)
+
+
+def _same_interval(cdf, a, b):
+    """Equal index, or zero-width-tied intervals (same boundary value)."""
+    return np.array_equal(a, b) or bool(np.all(cdf[a] == cdf[b]))
+
+
+weights_strategy = st.lists(
+    st.floats(min_value=0.0, max_value=1e6, allow_nan=False, width=32),
+    min_size=1,
+    max_size=300,
+).filter(lambda w: sum(w) > 1e-6)
+
+
+@settings
+@hypothesis.given(
+    w=weights_strategy,
+    m=st.integers(min_value=1, max_value=512),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_forest_inverts_cdf(w, m, seed):
+    """Core property: forest traversal == monotone inverse CDF, for any
+    non-negative weights (including zeros) and any guide-table size."""
+    f = build_forest(jnp.asarray(w, jnp.float32), m)
+    xi = np.random.default_rng(seed).random(512).astype(np.float32)
+    got = np.asarray(sample_forest(f, jnp.asarray(xi)))
+    oracle = np.asarray(sample_binary(f.cdf, jnp.asarray(xi)))
+    cdf = np.asarray(f.cdf)
+    assert _same_interval(cdf, got, oracle)
+    # Inversion property: P_{i-1} <= xi < P_i
+    assert np.all(cdf[got] <= xi) and np.all(xi < cdf[got + 1])
+
+
+@settings
+@hypothesis.given(
+    w=weights_strategy.filter(lambda w: all(x > 1e-6 for x in w)),
+    m=st.integers(min_value=1, max_value=64),
+)
+def test_vectorized_builder_matches_apetrei(w, m):
+    """The TPU-native builder is bit-identical to the faithful Algorithm-1
+    emulation (same trees, same guide table) for positive weights."""
+    f = build_forest(jnp.asarray(w, jnp.float32), m)
+    ap = build_forest_apetrei(np.asarray(f.cdf), m)
+    fn = forest_to_numpy(f)
+    assert np.array_equal(fn["table"], ap["table"])
+    assert np.array_equal(fn["left"], ap["left"])
+    assert np.array_equal(fn["right"], ap["right"])
+
+
+@settings
+@hypothesis.given(
+    w=weights_strategy,
+    m=st.integers(min_value=1, max_value=128),
+)
+def test_forest_structure_valid(w, m):
+    f = build_forest(jnp.asarray(w, jnp.float32), m)
+    validate_forest(f)
+
+
+@settings
+@hypothesis.given(
+    w=weights_strategy,
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_monotonicity(w, seed):
+    """The paper's central claim vs the Alias Method: the mapping xi -> i is
+    non-decreasing, so low-discrepancy structure survives the warp."""
+    f = build_forest(jnp.asarray(w, jnp.float32), 32)
+    xi = np.sort(np.random.default_rng(seed).random(256).astype(np.float32))
+    got = np.asarray(sample_forest(f, jnp.asarray(xi)))
+    assert np.all(np.diff(got) >= 0)
+
+
+@settings
+@hypothesis.given(
+    w=weights_strategy,
+    m=st.integers(min_value=1, max_value=64),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_all_samplers_agree(w, m, seed):
+    cdf = build_cdf(jnp.asarray(w, jnp.float32))
+    f = build_forest_from_cdf(cdf, m)
+    xi = np.random.default_rng(seed).random(256).astype(np.float32)
+    xj = jnp.asarray(xi)
+    cdf_np = np.asarray(cdf)
+    ref = np.asarray(sample_binary(cdf, xj))
+    n = len(w)
+    for name, got in {
+        "linear": np.asarray(sample_linear(cdf, xj)),
+        "cut_bin": np.asarray(sample_cutpoint_binary(cdf, f.cell_first, xj)),
+        "cut_lin": np.asarray(sample_cutpoint_linear(cdf, f.cell_first, xj, n)),
+        "forest": np.asarray(sample_forest(f, xj)),
+        "forest_nofb": np.asarray(sample_forest(f, xj, use_fallback=False)),
+    }.items():
+        assert _same_interval(cdf_np, got, ref), name
+
+
+def test_distribution_preserved_chi2():
+    """Sampled histogram matches p (chi^2 well under a generous bound)."""
+    rng = np.random.default_rng(7)
+    p = normalize_weights(rng.random(64) ** 4 + 1e-4)
+    f = build_forest(jnp.asarray(p), 64)
+    n_samples = 1 << 16
+    xi = rng.random(n_samples).astype(np.float32)
+    idx = np.asarray(sample_forest(f, jnp.asarray(xi)))
+    counts = np.bincount(idx, minlength=64)
+    expected = p * n_samples
+    chi2 = float(np.sum((counts - expected) ** 2 / np.maximum(expected, 1e-9)))
+    # 63 dof: mean 63, sd ~11; 200 is a ~12-sigma guard against regression
+    assert chi2 < 200, chi2
+
+
+def test_counting_twins_match_jax():
+    rng = np.random.default_rng(3)
+    w = normalize_weights(rng.random(200) ** 6 + 1e-9)
+    f = build_forest(jnp.asarray(w), 128)
+    xi = rng.random(2048).astype(np.float32)
+    i_jax, visits = sample_forest_with_stats(f, jnp.asarray(xi))
+    i_np, loads = np_sample_forest_counting(f, xi)
+    assert np.array_equal(np.asarray(i_jax), i_np)
+    # numpy twin counts the guide load too
+    assert np.array_equal(np.asarray(visits) + 1, loads)
+
+
+def test_degenerate_ties_fall_back():
+    """Zero-width intervals chain deeper than the 32-level radix bound; the
+    build must flag those cells and fallback traversal must stay correct."""
+    w = np.zeros(300, np.float32)
+    w[150] = 1.0
+    f = build_forest(jnp.asarray(w + 1e-12), 16)
+    assert int(np.asarray(f.fallback).sum()) >= 1
+    xi = np.random.default_rng(0).random(1024).astype(np.float32)
+    got = np.asarray(sample_forest(f, jnp.asarray(xi)))
+    cdf = np.asarray(f.cdf)
+    assert np.all(cdf[got] <= xi) and np.all(xi < cdf[got + 1])
+
+
+def test_single_interval():
+    f = build_forest(jnp.asarray([3.0], jnp.float32), 8)
+    xi = jnp.asarray([0.0, 0.3, 0.999], jnp.float32)
+    assert np.array_equal(np.asarray(sample_forest(f, xi)), [0, 0, 0])
+
+
+def test_table1_shape_of_results():
+    """Sanity on the Table-1 reproduction: forest beats binary search on
+    avg_32 for the high-dynamic-range periodic distributions."""
+    n = 256
+    rng = np.random.default_rng(0)
+    xi = rng.random(1 << 14).astype(np.float32)
+    w = normalize_weights((np.arange(n) % 64 + 1.0) ** 35)
+    f = build_forest(jnp.asarray(w), 256)
+    _, loads_f = np_sample_forest_counting(f, xi)
+    _, loads_b = np_sample_cutpoint_binary_counting(
+        np.asarray(f.cdf), np.asarray(f.cell_first), np.asarray(f.table), xi
+    )
+    from repro.core import warp_cost
+
+    assert warp_cost(loads_f) < warp_cost(loads_b)
+
+
+def test_np_build_cdf_matches_jax():
+    rng = np.random.default_rng(11)
+    w = rng.random(100).astype(np.float32)
+    np.testing.assert_allclose(
+        np_build_cdf(w), np.asarray(build_cdf(jnp.asarray(w))), atol=2e-7
+    )
+
+
+def test_batch_cost_is_lane_max():
+    """DESIGN §3: predicated batch traversal costs max-per-batch visits —
+    the while_loop iteration count equals the deepest lane's node count
+    (the hardware analogue of the paper's average_32)."""
+    rng = np.random.default_rng(0)
+    w = normalize_weights(rng.random(256) ** 15 + 1e-12)
+    f = build_forest(jnp.asarray(w), 64)
+    xi = jnp.asarray(rng.random(1024), jnp.float32)
+    _, visits = sample_forest_with_stats(f, xi)
+    v = np.asarray(visits)
+    # per-32-lane groups: cost of the group = its max (all lanes step together)
+    groups = v[: 1024 // 32 * 32].reshape(-1, 32)
+    assert np.all(groups.max(axis=1) >= groups.mean(axis=1))
+    assert v.max() <= 64  # bounded by MAX_DEPTH guard for real CDFs
