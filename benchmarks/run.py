@@ -1,17 +1,26 @@
 """Benchmark harness: one module per paper table/figure + systems benches.
 
-  PYTHONPATH=src python -m benchmarks.run [--quick]
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--json OUT.json]
 
 Prints ``name,...`` CSV lines per benchmark (format per module docstrings).
+``--json`` additionally writes a machine-readable record ``{section:
+{lines: [...], seconds: float}}`` — ``BENCH_baseline.json`` in the repo root
+is one such record, committed so future PRs have a perf trajectory to diff
+against (same CSV keys, CPU, --quick).
 """
 from __future__ import annotations
 
-import sys
+import argparse
+import json
 import time
 
 
 def main() -> None:
-    quick = "--quick" in sys.argv
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", dest="json_out", metavar="OUT.json", default=None)
+    args = ap.parse_args()
+    quick, json_out = args.quick, args.json_out
     from benchmarks import construction, convergence, sampling_throughput, serving_diversity, table1
 
     sections = [
@@ -22,12 +31,22 @@ def main() -> None:
         ("Sampling throughput", sampling_throughput.main),
         ("Serving best-of-n diversity", serving_diversity.main),
     ]
+    record: dict[str, dict] = {}
     for title, fn in sections:
         t0 = time.time()
         print(f"# === {title} ===", flush=True)
+        lines = []
         for line in fn():
             print(line, flush=True)
-        print(f"# ({time.time() - t0:.1f}s)", flush=True)
+            lines.append(line)
+        dt = time.time() - t0
+        print(f"# ({dt:.1f}s)", flush=True)
+        record[title] = {"lines": lines, "seconds": round(dt, 2)}
+    if json_out:
+        meta = {"quick": quick}
+        with open(json_out, "w") as fh:
+            json.dump({"meta": meta, "sections": record}, fh, indent=2)
+        print(f"# wrote {json_out}", flush=True)
 
 
 def _convergence_quick():

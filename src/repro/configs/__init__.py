@@ -2,12 +2,21 @@
 
 Every module defines ``CONFIG`` (full scale, dry-run only) and the registry
 offers ``get(name)`` / ``get_reduced(name)`` (CPU smoke scale).
+
+Import hygiene: this module imports **nothing** from ``repro.models`` at
+module scope — config lookups must keep working even when a heavyweight
+subsystem (models / dist / kernels) is broken, so that one bad import fails
+only its own tests instead of cascading through every consumer of the
+registry (``ModelConfig``/``reduced`` are fetched lazily inside ``get`` /
+``get_reduced`` / ``__getattr__``).
 """
 from __future__ import annotations
 
 import importlib
+from typing import TYPE_CHECKING
 
-from repro.models.config import ModelConfig, reduced
+if TYPE_CHECKING:  # annotation-only; not imported at runtime
+    from repro.models.config import ModelConfig
 
 ARCHS = [
     "jamba_1_5_large_398b",
@@ -40,17 +49,27 @@ def canonical(name: str) -> str:
     return _ALIAS.get(name, name)
 
 
-def get(name: str) -> ModelConfig:
+def get(name: str) -> "ModelConfig":
     mod = importlib.import_module(f"repro.configs.{canonical(name)}")
     return mod.CONFIG
 
 
-def get_reduced(name: str) -> ModelConfig:
+def get_reduced(name: str) -> "ModelConfig":
     mod = importlib.import_module(f"repro.configs.{canonical(name)}")
     if hasattr(mod, "REDUCED"):
         return mod.REDUCED
+    from repro.models.config import reduced
+
     return reduced(mod.CONFIG)
 
 
-def all_configs() -> dict[str, ModelConfig]:
+def all_configs() -> dict:
     return {a: get(a) for a in ARCHS}
+
+
+def __getattr__(name: str):  # back-compat: configs.ModelConfig / configs.reduced
+    if name in ("ModelConfig", "reduced"):
+        from repro.models import config as _c
+
+        return getattr(_c, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,16 @@
+"""Distribution layer: sharding policies, tracing hints, pipeline schedule,
+and gradient compression.
+
+Submodules (imported lazily by callers; this package import stays light so
+``tests/test_imports.py`` can pinpoint a broken submodule):
+
+* :mod:`repro.dist.sharding`    — ``Policy`` + PartitionSpec rule trees for
+  the param / optimizer / batch / cache structs in ``repro.launch.shapes``.
+* :mod:`repro.dist.hints`       — scoped tracing hints (``sharding_hints``)
+  whose ``gather_params`` / ``act_seq`` call sites in ``repro.models.model``
+  are *identity no-ops* outside the context.
+* :mod:`repro.dist.pipeline`    — GPipe microbatch schedule over
+  ``lax.ppermute`` (matches sequential execution, differentiable).
+* :mod:`repro.dist.compression` — int8 quantization, error-feedback gradient
+  compression, and compressed cross-pod all-reduce.
+"""

@@ -1,0 +1,113 @@
+"""Scoped tracing hints: ZeRO-3 gather-on-use and Megatron-SP residuals.
+
+``repro.models.model`` calls :func:`gather_params` / :func:`act_seq`
+unconditionally. The contract:
+
+* **Outside** a :func:`sharding_hints` context both functions return their
+  argument *unchanged* (the very same object — not a copy, not an identity
+  op in the jaxpr). Hints-free execution is therefore bit-identical to a
+  model that never heard of this module (tested by
+  ``tests/test_dist.py::test_hints_noop_bitwise``).
+* **Inside** the context they insert ``with_sharding_constraint``s:
+  ``gather_params`` re-constrains each parameter leaf to its policy spec
+  *minus the FSDP axes* (params stay TP-sharded but are gathered across the
+  ZeRO-3 axes right at the point of use, letting XLA overlap the gather with
+  the previous layer); ``act_seq`` constrains the (B, S, D) residual stream
+  to be sequence-sharded over ``Policy.sp`` (Megatron sequence parallelism:
+  norms and elementwise work run on S/sp_size tokens per device).
+
+Cache-key caveat: the hints are read at *trace* time. An entry point must be
+first traced (``jit(...).lower`` or first call) inside the context for the
+hints to take effect — re-calling an already-traced jit under different
+hints returns the cached executable. The dry-run launcher compiles one cell
+per process, which guarantees this; tests build fresh ``jax.jit`` objects.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Any
+
+from .sharding import Policy, param_specs, _entry, _sanitize
+
+_CURRENT: "Hints | None" = None
+
+
+@dataclasses.dataclass(frozen=True)
+class Hints:
+    """What to constrain while tracing under ``sharding_hints``.
+
+    ``mesh`` may be omitted: it is resolved from the ambient ``with mesh:``
+    context at trace time (the dry-run always runs inside one).
+    """
+
+    policy: Policy
+    gather_weights: bool = False
+    seq_shard: bool = False
+    mesh: Any = None
+
+
+@contextlib.contextmanager
+def sharding_hints(hints: Hints):
+    """Activate ``hints`` for every model traced inside the block."""
+    global _CURRENT
+    prev, _CURRENT = _CURRENT, hints
+    try:
+        yield hints
+    finally:
+        _CURRENT = prev
+
+
+def current_hints() -> Hints | None:
+    return _CURRENT
+
+
+def _resolve_mesh(h: Hints):
+    if h.mesh is not None:
+        return h.mesh
+    try:  # ambient `with mesh:` context (jax keeps it in thread resources)
+        from jax._src import mesh as mesh_lib
+
+        m = mesh_lib.thread_resources.env.physical_mesh
+        return None if m.empty else m
+    except Exception:
+        return None
+
+
+def gather_params(tree: Any) -> Any:
+    """ZeRO-3 gather-on-use. Identity (same object) without active hints."""
+    h = _CURRENT
+    if h is None or not h.gather_weights:
+        return tree
+    mesh = _resolve_mesh(h)
+    if mesh is None:
+        return tree
+    import jax
+    from jax.sharding import NamedSharding
+
+    # Gathered view: same spec tree with the FSDP axes dropped (TP survives).
+    pol = dataclasses.replace(h.policy, fsdp=())
+    specs = param_specs(tree, pol, dict(mesh.shape))
+    return jax.tree.map(
+        lambda x, s: jax.lax.with_sharding_constraint(x, NamedSharding(mesh, s)),
+        tree,
+        specs,
+    )
+
+
+def act_seq(x: Any) -> Any:
+    """Megatron-SP residual constraint. Identity without active hints."""
+    h = _CURRENT
+    if h is None or not h.seq_shard:
+        return x
+    mesh = _resolve_mesh(h)
+    if mesh is None:
+        return x
+    import jax
+    from jax.sharding import NamedSharding
+
+    pol = h.policy
+    dp = None if pol.shard_seq and not pol.dp else _entry(pol.dp)
+    spec = (dp, _entry(pol.sp)) + (None,) * (x.ndim - 2)
+    s = _sanitize(spec[: x.ndim], x.shape, dict(mesh.shape))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, s))

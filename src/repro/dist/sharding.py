@@ -1,0 +1,284 @@
+"""Sharding policy + PartitionSpec rule trees for the model/opt/batch structs.
+
+``Policy`` names which mesh axes carry which kind of parallelism:
+
+* ``dp``   — pure data parallelism (batch dim of activations; grads
+  all-reduced, params replicated unless also in ``fsdp``).
+* ``fsdp`` — ZeRO-3 style parameter/optimizer sharding axes. Params are
+  *stored* sharded along these axes; the ``gather_params`` hint
+  (:mod:`repro.dist.hints`) re-gathers them at use.
+* ``tp``   — tensor parallelism (Megatron-style): heads / ff / vocab dims.
+  ``None`` disables TP; a tuple (e.g. ``("data", "model")``) gives 2-D
+  weight-stationary TP for large-model decode.
+* ``shard_seq`` / ``sp`` — sequence (Megatron-SP) sharding of activations /
+  KV caches along ``sp``.
+
+Presets (``Policy.recommended``) encode the measured §Perf findings:
+small-model training wants pure DP over every axis (no TP collectives on the
+critical path); large-model training wants TP over ``model`` + FSDP over the
+remaining axes; large-model decode wants 2-D weight-stationary TP with
+sequence-sharded KV; small-model decode wants 1-D TP (weights fit, latency
+dominated by the all-gather of tiny activations).
+
+Every rule here is *advisory to GSPMD*: a spec that does not divide a dim is
+dropped (conservative replication) so one odd head count can never turn a
+dry-run into a shape error.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+Axes = tuple[str, ...]
+
+# Parameter leaves that stay replicated everywhere: norm scales, tiny bias /
+# gate vectors, SSM scalars-per-channel. They are O(d_model) — sharding them
+# buys nothing and costs a gather per use.
+_REPLICATED_NAMES = frozenset(
+    {"scale", "bias", "if_bias", "dt_bias", "d_skip", "a_log", "conv", "len"}
+)
+_BLOCK_KEY = re.compile(r"^(b|x)\d+$")
+_MLP_KEY = re.compile(r"^m\d+$")
+# Large-model thresholds (total params) for the recommended presets.
+_TRAIN_TP_THRESHOLD = 16e9
+_DECODE_2D_THRESHOLD = 100e9
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    """Axis assignment for one (arch, shape, mesh) cell.
+
+    Fields are mesh axis names: ``dp``/``fsdp`` are tuples, ``tp``/``sp``
+    are a single axis name, a tuple (multi-axis TP), or ``None``.
+    ``dataclasses.asdict`` must stay JSON-serializable (dry-run records).
+    """
+
+    dp: Axes = ()
+    tp: str | Axes | None = None
+    fsdp: Axes = ()
+    shard_seq: bool = False
+    sp: str | Axes | None = None
+
+    @classmethod
+    def for_mesh(cls, mesh, kind: str = "train") -> "Policy":
+        """Default policy: TP over the ``model`` axis (when present), DP over
+        everything else, FSDP==DP for training, no FSDP for serving kinds."""
+        axes = tuple(mesh.axis_names)
+        model = "model" if "model" in axes else None
+        rest = tuple(a for a in axes if a != model)
+        return cls(
+            dp=rest,
+            tp=model,
+            fsdp=rest if kind == "train" else (),
+            shard_seq=False,
+            sp=model,
+        )
+
+    @classmethod
+    def recommended(cls, cfg, mesh, mode: str) -> "Policy":
+        """Hillclimbed presets keyed on model scale and execution mode.
+
+        * train, small  (< 16e9 params): pure DP over *all* axes — no TP
+          collectives; grads all-reduce once per step.
+        * train, large: TP over ``model`` + FSDP/DP over the rest.
+        * decode, small (< 100e9): 1-D TP over ``model``, DP over the rest.
+        * decode, large: 2-D weight-stationary TP over every axis,
+          sequence-sharded KV (``shard_seq``), no DP/FSDP.
+        """
+        axes = tuple(mesh.axis_names)
+        model = "model" if "model" in axes else axes[-1]
+        rest = tuple(a for a in axes if a != model)
+        total, _ = cfg.param_count()
+
+        if mode in ("train", "prefill"):
+            if total < _TRAIN_TP_THRESHOLD:
+                return cls(dp=axes, tp=None, fsdp=axes, shard_seq=False, sp=model)
+            return cls(dp=rest, tp=model, fsdp=rest, shard_seq=False, sp=model)
+        # decode / long
+        if total < _DECODE_2D_THRESHOLD:
+            return cls(dp=rest, tp=model, fsdp=(), shard_seq=False, sp=model)
+        return cls(dp=(), tp=axes, fsdp=(), shard_seq=True, sp=model)
+
+
+# --------------------------------------------------------------------- rules
+
+
+def _axes_of(entry) -> Axes:
+    if entry is None:
+        return ()
+    return entry if isinstance(entry, tuple) else (entry,)
+
+
+def _entry(entry):
+    """Normalize a spec entry: drop empty tuples, unwrap singletons."""
+    axes = _axes_of(entry)
+    if not axes:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def _sanitize(spec: tuple, shape: tuple[int, ...], mesh_shape: dict) -> P:
+    """Drop spec entries that do not divide their dim or reuse an axis."""
+    used: set[str] = set()
+    out = []
+    for dim, entry in zip(shape, spec):
+        axes = tuple(a for a in _axes_of(entry) if a not in used)
+        size = int(np.prod([mesh_shape[a] for a in axes])) if axes else 1
+        if not axes or size <= 1 or dim % size != 0:
+            out.append(None)
+            continue
+        used.update(axes)
+        out.append(_entry(axes))
+    return P(*out)
+
+
+def _core_spec(path_names: tuple[str, ...], name: str, ndim: int, pol: Policy):
+    """PartitionSpec entries for one *unstacked* parameter leaf.
+
+    ``path_names`` is the full dict path (so MoE ``wo`` (E,F,D) can be told
+    apart from attention ``wo`` (H,hd,D) by its ``m<i>`` parent).
+    """
+    t = _entry(pol.tp)
+    f = _entry(pol.fsdp)
+    if name in _REPLICATED_NAMES or ndim <= 1:
+        return (None,) * ndim
+    if name == "embed":                       # (V, D): vocab->tp, d->fsdp
+        return (t, f)
+    if name == "lm_head":                     # (D, V)
+        return (f, t)
+    in_mlp = any(_MLP_KEY.match(p) for p in path_names) or "mlp" in path_names \
+        or "shared" in path_names
+    if in_mlp:
+        if name == "router":                  # (D, E)
+            return (f, None)
+        if ndim == 3:                         # MoE experts (E, D, F)/(E, F, D)
+            return (t, f, None) if name in ("wi", "wg") else (t, None, f)
+        # dense / shared-expert MLP (d, ff) / (ff, d)
+        return (f, t) if name in ("wi", "wg") else (t, f)
+    # attention / ssm / xlstm blocks
+    if name in ("wq", "wk", "wv"):
+        return (f, t, None) if ndim == 3 else (f, t)
+    if name == "wo":                          # (H, hd, D)
+        return (t, None, f)
+    if name in ("bq", "bk", "bv"):            # (H, hd)
+        return (t, None)
+    if name in ("up", "wx", "in_proj", "wi", "wg"):   # (D, inner)
+        return (f, t)
+    if name in ("down", "out_proj"):          # (inner, D)
+        return (t, f)
+    if name == "r":                           # slstm recurrent (H, hd, 4hd)
+        return (t, None, None)
+    if name in ("wif", "x_proj"):             # (inner, small)
+        return (f, None)
+    return (None,) * ndim
+
+
+def _path_names(path) -> tuple[str, ...]:
+    out = []
+    for k in path:
+        key = getattr(k, "key", None)
+        out.append(str(key if key is not None else getattr(k, "idx", k)))
+    return tuple(out)
+
+
+def _leaf_spec(path, leaf, pol: Policy, mesh_shape: dict) -> P:
+    names = _path_names(path)
+    name = names[-1] if names else ""
+    ndim = len(leaf.shape)
+    stacked = bool(names) and names[0] in ("layers", "encoder")
+    core_ndim = ndim - 1 if stacked else ndim
+    spec = _core_spec(names, name, core_ndim, pol)
+    if stacked:
+        spec = (None,) + tuple(spec)   # never shard the scan/period axis
+    return _sanitize(spec, leaf.shape, mesh_shape)
+
+
+def param_shardings(mesh, tree: Any, pol: Policy) -> Any:
+    """NamedSharding tree for a params (or opt m/v) struct.
+
+    Works on the stacked full-model struct (``params_struct``) and on the
+    per-period subtree seen inside ``lax.scan`` (used by the gather hint).
+    """
+    import jax
+
+    shape = dict(mesh.shape)
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, _leaf_spec(path, leaf, pol, shape)),
+        tree,
+    )
+
+
+def param_specs(tree: Any, pol: Policy, mesh_shape: dict) -> Any:
+    """Like :func:`param_shardings` but raw ``PartitionSpec`` leaves (for
+    ``with_sharding_constraint`` inside a mesh context)."""
+    import jax
+
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _leaf_spec(path, leaf, pol, mesh_shape), tree
+    )
+
+
+# ------------------------------------------------------------ batch / cache
+
+
+def _dp_entry(pol: Policy):
+    return _entry(pol.dp)
+
+
+def batch_specs(cfg, pol: Policy, b_sds: dict | None = None) -> dict[str, P]:
+    """PartitionSpec per batch tensor (train / prefill structs).
+
+    Batch dim shards over ``dp``; with ``shard_seq`` the sequence dim shards
+    over ``sp`` (Megatron-SP enters the stack already sequence-sharded).
+    """
+    dp = _dp_entry(pol)
+    sp = _entry(pol.sp) if pol.shard_seq else None
+    rank = {"tokens": 2, "labels": 2, "embeds": 3, "frames": 3}
+    if b_sds is not None:
+        keys = list(b_sds)
+    else:
+        keys = (["embeds"] if cfg.frontend == "embed" else ["tokens"]) + (
+            ["frames"] if cfg.encoder_layers else []
+        ) + ["labels"]
+    out = {}
+    for k in keys:
+        r = rank.get(k, 2)
+        spec = (dp, sp) + (None,) * (r - 2)
+        out[k] = P(*spec[:r])
+    return out
+
+
+def cache_spec_tree(cfg, cache_sds: Any, pol: Policy, mesh) -> Any:
+    """NamedSharding tree for the decode-cache struct from ``init_cache``.
+
+    Leaves carry a leading period (scan) axis that never shards. The batch
+    dim shards over ``dp``; attention K/V additionally shard the sequence
+    dim over ``sp`` when ``shard_seq`` and the KV-head dim over ``tp``;
+    recurrent states (mamba/xlstm) shard their channel dim over ``tp``.
+    """
+    import jax
+
+    shape = dict(mesh.shape)
+    dp = None if pol.shard_seq else _dp_entry(pol)
+    t = _entry(pol.tp)
+    sp = _entry(pol.sp) if pol.shard_seq else None
+
+    def leaf(path, l):
+        names = _path_names(path)
+        name = names[-1] if names else ""
+        nd = len(l.shape)
+        if name == "len" or nd <= 1:
+            return NamedSharding(mesh, P())
+        if name in ("k", "v") and nd == 5:       # (periods, B, S, KV, hd)
+            spec = (None, dp, sp, t, None)
+        elif nd >= 3:                            # recurrent state (periods, B, C, ...)
+            spec = (None, dp, t) + (None,) * (nd - 3)
+        else:                                    # (periods, B)
+            spec = (None, dp)
+        return NamedSharding(mesh, _sanitize(spec, l.shape, shape))
+
+    return jax.tree_util.tree_map_with_path(leaf, cache_sds)

@@ -28,14 +28,18 @@ def _sample_kernel(cdf_ref, xi_ref, o_ref, *, tile: int, k: int):
     V = row.shape[-1]
     nt = V // tile
     bounds = row.reshape(nt, tile)[:, -1]   # (nt,) tile cutpoints
+    xis = xi_ref[...]                       # (1, k) — whole-block load only:
+    # scalar int ref indexing (xi_ref[0, kk]) breaks the interpret-mode
+    # discharge rule, and block loads are the TPU-native access pattern.
+    out = []
     for kk in range(k):                     # k is small & static (usually 1)
-        xi = xi_ref[0, kk]
+        xi = xis[0, kk]
         t = jnp.sum((bounds <= xi).astype(jnp.int32))
         t = jnp.minimum(t, nt - 1)
-        seg = pl.load(cdf_ref, (0, pl.dslice(t * tile, tile)))
-        off = jnp.sum((seg <= xi).astype(jnp.int32))
-        i = t * tile + jnp.minimum(off, tile - 1)
-        o_ref[0, kk] = i
+        seg = pl.load(cdf_ref, (pl.dslice(0, 1), pl.dslice(t * tile, tile)))
+        off = jnp.sum((seg[0] <= xi).astype(jnp.int32))
+        out.append(t * tile + jnp.minimum(off, tile - 1))
+    o_ref[...] = jnp.stack(out)[None, :]
 
 
 @functools.partial(jax.jit, static_argnames=("tile", "interpret"))

@@ -27,37 +27,22 @@ import time
 import traceback
 from pathlib import Path
 
-import jax
-import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
-
-import repro.configs as configs
-from repro.dist.sharding import (
-    Policy,
-    batch_specs,
-    cache_spec_tree,
-    param_shardings,
-)
-from repro.launch import roofline as R
-from repro.launch.mesh import make_production_mesh
-from repro.launch.shapes import (
-    SHAPES,
-    batch_specs_struct,
-    cache_struct,
-    cell_matrix,
-    decode_inputs_struct,
-    params_struct,
-)
-from repro.train.optimizer import AdamWConfig, init_opt
-from repro.train.step import make_serve_step, make_train_step
+# Import hygiene: everything heavyweight (jax, repro.models, repro.dist, the
+# step builders) is imported inside function bodies. Importing this module
+# must stay cheap and dependency-free so `--list`, the report tooling, and
+# `tests/test_imports.py` cannot be taken down by a broken subsystem.
 
 
 def _opt_struct(params_sds, opt_dtype: str):
+    import jax
+
+    from repro.train.optimizer import AdamWConfig, init_opt
+
     oc = AdamWConfig(opt_dtype=opt_dtype)
     return jax.eval_shape(lambda p: init_opt(oc, p), params_sds), oc
 
 
-def _dp(pol: Policy):
+def _dp(pol):
     return pol.dp if len(pol.dp) > 1 else (pol.dp[0] if pol.dp else None)
 
 
@@ -74,6 +59,27 @@ def run_cell(
     seq_shard: bool = False,
     params_dtype: str = "float32",
 ) -> dict:
+    import jax
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    import repro.configs as configs
+    from repro.dist.sharding import (
+        Policy,
+        batch_specs,
+        cache_spec_tree,
+        param_shardings,
+    )
+    from repro.launch import roofline as R
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.shapes import (
+        SHAPES,
+        batch_specs_struct,
+        decode_inputs_struct,
+        params_struct,
+    )
+    from repro.train.step import make_serve_step, make_train_step
+
     cfg = configs.get(arch)
     sh = SHAPES[shape]
     mesh = make_production_mesh(multi_pod=multi_pod)
@@ -247,6 +253,9 @@ def run_cell(
 
 
 def main() -> None:
+    import repro.configs as configs
+    from repro.launch.shapes import SHAPES, cell_matrix
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", type=str)
     ap.add_argument("--shape", type=str, choices=list(SHAPES))

@@ -12,8 +12,10 @@ import jax
 import jax.numpy as jnp
 
 import repro.configs as configs
-from repro.models import init_cache, init_params
 from repro.models.config import ModelConfig
+# repro.models (init_params/init_cache -> the full model + dist layers) is
+# imported inside the *_struct functions: `dryrun --list` / `cell_matrix`
+# must keep working when a heavyweight subsystem is broken.
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,10 +66,14 @@ def batch_specs_struct(cfg: ModelConfig, sh: ShapeSpec) -> dict[str, Any]:
 
 
 def params_struct(cfg: ModelConfig):
+    from repro.models import init_params
+
     return jax.eval_shape(lambda k: init_params(k, cfg), jax.random.PRNGKey(0))
 
 
 def cache_struct(cfg: ModelConfig, B: int, max_seq: int):
+    from repro.models import init_cache
+
     return jax.eval_shape(lambda: init_cache(cfg, B, max_seq))
 
 

@@ -1,20 +1,39 @@
-from .config import ModelConfig, reduced
-from .model import (
-    decode_step,
-    forward,
-    init_cache,
-    init_params,
-    loss_fn,
-    prefill,
-)
+"""Model package with lazy exports (PEP 562).
 
-__all__ = [
-    "ModelConfig",
-    "reduced",
-    "decode_step",
-    "forward",
-    "init_cache",
-    "init_params",
-    "loss_fn",
-    "prefill",
-]
+``repro.models.config`` is import-cheap (dataclasses only), but
+``repro.models.model`` pulls jax + the distribution layer. Deferring the
+re-exports means ``import repro.configs`` (which only needs ``config``)
+cannot be taken down by a broken heavyweight dependency — one missing
+module fails exactly the tests that touch it instead of zeroing out
+collection for the whole suite (see ``tests/test_imports.py``).
+"""
+from __future__ import annotations
+
+import importlib
+
+_EXPORTS = {
+    "ModelConfig": ".config",
+    "reduced": ".config",
+    "decode_step": ".model",
+    "forward": ".model",
+    "init_cache": ".model",
+    "init_params": ".model",
+    "loss_fn": ".model",
+    "prefill": ".model",
+}
+
+__all__ = list(_EXPORTS)
+
+
+def __getattr__(name: str):
+    try:
+        mod = _EXPORTS[name]
+    except KeyError:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}") from None
+    value = getattr(importlib.import_module(mod, __name__), name)
+    globals()[name] = value   # cache: subsequent lookups skip __getattr__
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

@@ -1,0 +1,163 @@
+"""Strategy objects for the hypothesis stub: ``example(rng)`` draws one
+value. Boundary values (min/max/zero) are over-weighted relative to a pure
+uniform draw, and wide float ranges are sampled on a log scale half the
+time so extreme magnitudes (the 1e-30..1e30 cases) actually show up.
+"""
+from __future__ import annotations
+
+import math
+
+
+class SearchStrategy:
+    def filter(self, predicate):
+        return _Filtered(self, predicate)
+
+    def map(self, fn):
+        return _Mapped(self, fn)
+
+    def example(self, rng):
+        raise NotImplementedError
+
+
+class _Filtered(SearchStrategy):
+    def __init__(self, base, predicate):
+        self._base, self._pred = base, predicate
+
+    def example(self, rng):
+        for _ in range(1000):
+            v = self._base.example(rng)
+            if self._pred(v):
+                return v
+        raise ValueError("filter predicate rejected 1000 consecutive examples")
+
+
+class _Mapped(SearchStrategy):
+    def __init__(self, base, fn):
+        self._base, self._fn = base, fn
+
+    def example(self, rng):
+        return self._fn(self._base.example(rng))
+
+
+class _Floats(SearchStrategy):
+    def __init__(self, min_value, max_value, width):
+        self.lo = -1e9 if min_value is None else float(min_value)
+        self.hi = 1e9 if max_value is None else float(max_value)
+        self.width = width
+
+    def example(self, rng):
+        r = rng.random()
+        if r < 0.05:
+            x = self.lo
+        elif r < 0.10:
+            x = self.hi
+        elif r < 0.20 and self.lo <= 0.0 <= self.hi:
+            x = 0.0
+        elif r < 0.55 and self.hi > 0:
+            # log-scale draw across the positive magnitudes of the range
+            hi_exp = math.log10(self.hi) if self.hi > 0 else 0.0
+            lo_exp = max(hi_exp - 38.0, -38.0)
+            x = 10.0 ** rng.uniform(lo_exp, hi_exp)
+            x = min(max(x, self.lo), self.hi)
+        else:
+            x = rng.uniform(self.lo, self.hi)
+        if self.width == 32:
+            import numpy as np
+
+            x = float(np.float32(x))
+        return min(max(x, self.lo), self.hi)
+
+
+def floats(
+    min_value=None,
+    max_value=None,
+    allow_nan=None,
+    allow_infinity=None,
+    width=64,
+    **_kw,
+):
+    return _Floats(min_value, max_value, width)
+
+
+_SMALL = (0, 1, 2, 3, 5, 8, 13, 20)
+
+
+def _quantize(v: int, lo: int, hi: int) -> int:
+    """Snap small-range draws to a geometric palette. Sizes in this suite
+    become jit static args (array length n, guide size m) — unbounded
+    variety means one XLA compile per example. Seed-like huge ranges pass
+    through untouched."""
+    if hi - lo > 10_000 or v - lo <= 4:
+        return v
+    step = 1
+    while step * 2 <= v - lo:
+        step *= 2
+    return min(lo + step + (step // 2 if v - lo >= step + step // 2 else 0), hi)
+
+
+class _Integers(SearchStrategy):
+    def __init__(self, lo, hi):
+        self.lo, self.hi = lo, hi
+
+    def example(self, rng):
+        r = rng.random()
+        if r < 0.08:
+            return self.lo
+        if r < 0.16:
+            return self.hi
+        if r < 0.4:  # small values: interesting sizes like 1, 2, 3
+            return int(min(self.hi, self.lo + _SMALL[int(rng.integers(0, 6))]))
+        return _quantize(
+            int(rng.integers(self.lo, self.hi, endpoint=True)), self.lo, self.hi
+        )
+
+
+def integers(min_value=None, max_value=None):
+    lo = -(2**31) if min_value is None else int(min_value)
+    hi = 2**31 - 1 if max_value is None else int(max_value)
+    return _Integers(lo, hi)
+
+
+class _Lists(SearchStrategy):
+    def __init__(self, elements, min_size, max_size):
+        self.el, self.lo, self.hi = elements, min_size, max_size
+
+    def example(self, rng):
+        r = rng.random()
+        if r < 0.1:
+            n = self.lo
+        elif r < 0.2:
+            n = self.hi
+        elif r < 0.7:
+            n = int(min(self.hi, self.lo + _SMALL[int(rng.integers(0, len(_SMALL)))]))
+        else:
+            n = _quantize(
+                int(rng.integers(self.lo, self.hi, endpoint=True)),
+                self.lo, self.hi,
+            )
+        return [self.el.example(rng) for _ in range(n)]
+
+
+def lists(elements, min_size=0, max_size=50, **_kw):
+    return _Lists(elements, min_size, max_size)
+
+
+class _Sampled(SearchStrategy):
+    def __init__(self, options):
+        self.options = list(options)
+
+    def example(self, rng):
+        return self.options[int(rng.integers(0, len(self.options)))]
+
+
+def sampled_from(options):
+    return _Sampled(options)
+
+
+class _Booleans(SearchStrategy):
+    def example(self, rng):
+        return bool(rng.integers(0, 2))
+
+
+def booleans():
+    return _Booleans()

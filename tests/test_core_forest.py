@@ -186,6 +186,50 @@ def test_table1_shape_of_results():
     assert warp_cost(loads_f) < warp_cost(loads_b)
 
 
+_FUZZ_KINDS = ("uniform", "powerlaw", "ties", "zeros", "wide", "single")
+
+
+def _fuzz_weights(kind: str, n: int, rng) -> np.ndarray:
+    if kind == "uniform":
+        return rng.random(n).astype(np.float32) + np.float32(1e-3)
+    if kind == "powerlaw":
+        return (rng.random(n).astype(np.float32) ** 8) + np.float32(1e-9)
+    if kind == "ties":   # many exact float32 ties -> zero separator distances
+        base = rng.random(max(n // 8, 1)).astype(np.float32) + np.float32(1e-3)
+        return base[rng.integers(0, len(base), n)]
+    if kind == "zeros":  # ~half the intervals have zero width
+        w = rng.random(n).astype(np.float32)
+        w[rng.random(n) < 0.5] = 0.0
+        w[rng.integers(0, n)] = 1.0   # keep the total positive
+        return w
+    if kind == "wide":   # 60 decades of dynamic range in one vector
+        return (10.0 ** rng.uniform(-30, 30, n)).astype(np.float32)
+    return rng.random(1).astype(np.float32) + np.float32(0.5)   # single
+
+
+@pytest.mark.parametrize("m", [1, 7, 64, 1024])
+@pytest.mark.parametrize("kind", _FUZZ_KINDS)
+def test_fuzz_matrix_builder_bit_identical_and_valid(kind, m):
+    """Randomized regression matrix beyond the fixed cases above: every
+    weight family (power-law, uniform, exact ties, zeros, single-element,
+    1e-30..1e30 spans) x guide-table size must (a) produce a structurally
+    valid forest, (b) be bit-identical to the Algorithm-1 emulation, and
+    (c) satisfy the inversion property under traversal."""
+    rng = np.random.default_rng(1000 * m + _FUZZ_KINDS.index(kind))
+    for n in (1,) if kind == "single" else (2, 13, 300):
+        w = _fuzz_weights(kind, n, rng)
+        f = build_forest(jnp.asarray(w), m)
+        validate_forest(f)
+        ap = build_forest_apetrei(np.asarray(f.cdf), m)
+        fn = forest_to_numpy(f)
+        for key in ("table", "left", "right"):
+            assert np.array_equal(fn[key], ap[key]), (kind, n, m, key)
+        xi = rng.random(256).astype(np.float32)
+        got = np.asarray(sample_forest(f, jnp.asarray(xi)))
+        cdf = np.asarray(f.cdf)
+        assert np.all(cdf[got] <= xi) and np.all(xi < cdf[got + 1]), (kind, n, m)
+
+
 def test_np_build_cdf_matches_jax():
     rng = np.random.default_rng(11)
     w = rng.random(100).astype(np.float32)

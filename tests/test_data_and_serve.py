@@ -173,6 +173,7 @@ def test_microbatch_accumulation_matches_full_batch():
     assert abs(float(m1["loss"]) - float(m4["loss"])) < 1e-5
 
 
+@pytest.mark.slow
 def test_compressed_pod_allreduce_subprocess():
     """int8 cross-pod reduction: shared pre-agreed scale keeps the error at
     the quantization floor (a per-shard-scale bug showed 26% error)."""

@@ -81,6 +81,7 @@ def test_loss_decreases(tmp_path):
     assert last < first - 0.1, (first, last)
 
 
+@pytest.mark.slow
 def test_elastic_restore_other_mesh(tmp_path):
     """Save on 1 device, restore re-sharded onto an 8-device mesh in a
     subprocess (device count must be set before jax init)."""

@@ -68,6 +68,52 @@ def test_multirow_matches_per_row_build():
         assert np.array_equal(a, b) or np.all(cdfs[r][a] == cdfs[r][b])
 
 
+def test_forest2d_distribution_preserved_chi2():
+    """Chi-square goodness of fit for the 2-D path, mirroring the 1-D
+    ``test_distribution_preserved_chi2``: conditional column sampling within
+    each row must reproduce that row's distribution."""
+    rng = np.random.default_rng(11)
+    R, W, m = 8, 48, 32
+    img = rng.random((R, W)) ** 2 + 0.05   # bounded below: chi2 approx valid
+    cdfs = np.stack([np_build_cdf(normalize_weights(r)) for r in img])
+    f = build_forest_rows(jnp.asarray(cdfs), m=m)
+    per_row = 1 << 13
+    rows = np.repeat(np.arange(R), per_row).astype(np.int32)
+    xi = rng.random(R * per_row).astype(np.float32)
+    cols = np.asarray(sample_forest_rows(f, jnp.asarray(rows), jnp.asarray(xi)))
+    chi2 = 0.0
+    for r in range(R):
+        counts = np.bincount(cols[r * per_row : (r + 1) * per_row], minlength=W)
+        expected = np.diff(cdfs[r]) * per_row
+        chi2 += float(np.sum((counts - expected) ** 2 / np.maximum(expected, 1e-9)))
+    # dof = R*(W-1) = 376: mean 376, sd ~27.4; 650 is a ~10-sigma guard
+    assert chi2 < 650, chi2
+
+
+def test_forest2d_depth_bound():
+    """Paper Sec. 3: per-cell traversal depth is O(log overlap), not
+    O(overlap). Per-row 1-D builds are bit-identical to the flat 2-D build
+    (``test_multirow_matches_per_row_build``), so bounding their
+    ``depth_stats`` gates the 2-D path against linear-chain regressions:
+    a degenerate chain would hit ``o_max`` (~20-26 here), far above the
+    2*log2(o_max)+5 radix bound."""
+    from repro.core import build_forest_from_cdf, depth_stats
+
+    rng = np.random.default_rng(5)
+    R, W, m = 6, 64, 4
+    img = rng.random((R, W)) ** 6 + 1e-7
+    for r in range(R):
+        cdf = np_build_cdf(normalize_weights(img[r]))
+        f1 = build_forest_from_cdf(jnp.asarray(cdf), m)
+        ds = depth_stats(f1)
+        data = cdf[:-1]
+        cells = np.clip(np.floor(data * np.float32(m)).astype(int), 0, m - 1)
+        o_max = int(np.bincount(cells, minlength=m).max()) + 1
+        bound = 2 * int(np.ceil(np.log2(max(o_max, 2)))) + 5
+        assert ds["max_depth"] <= bound, (r, ds["max_depth"], o_max, bound)
+        assert o_max > bound  # the gate actually distinguishes log from linear
+
+
 # ---------------------------------------------------------------- LDS props
 
 

@@ -1,0 +1,64 @@
+"""Import hygiene: every repro.* module must import on its own.
+
+The seed suite died at *collection* because one missing subsystem
+(``repro.dist``) was pulled in transitively by the config registry. These
+tests pin the fix twice over: (a) each module imports in isolation, so the
+next missing dependency fails one precise test instead of cascading;
+(b) the cheap entry points (configs, launch CLIs) stay decoupled from the
+heavyweight model/dist imports.
+"""
+import importlib
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+_SRC = pathlib.Path(__file__).resolve().parent.parent / "src"
+
+
+def _modules():
+    out = []
+    for p in sorted((_SRC / "repro").rglob("*.py")):
+        rel = p.relative_to(_SRC).with_suffix("")
+        parts = list(rel.parts)
+        if parts[-1] == "__init__":
+            parts = parts[:-1]
+        out.append(".".join(parts))
+    return out
+
+
+MODULES = _modules()
+
+
+def test_module_list_is_nonempty():
+    assert "repro.dist.sharding" in MODULES and len(MODULES) > 40
+
+
+@pytest.mark.parametrize("mod", MODULES)
+def test_module_imports(mod):
+    importlib.import_module(mod)
+
+
+def test_configs_do_not_pull_models():
+    """`import repro.configs` + get() must not import repro.models.model (or
+    anything behind it): a broken model/dist layer must leave the registry,
+    the benchmark table configs, and `dryrun --list` usable. Subprocess so
+    this process's imports don't mask the regression."""
+    script = (
+        "import sys\n"
+        "import repro.configs as C\n"
+        "C.get('qwen3_4b'); C.get('kimi_k2_1t_a32b')\n"
+        "import repro.launch.dryrun\n"
+        "from repro.launch.shapes import cell_matrix\n"
+        "assert len(cell_matrix()) == 40\n"
+        "bad = [m for m in sys.modules if m.startswith('repro.models.model')\n"
+        "       or m.startswith('repro.dist')]\n"
+        "assert not bad, bad\n"
+        "print('HYGIENE_OK')\n"
+    )
+    p = subprocess.run(
+        [sys.executable, "-c", script], capture_output=True, text=True,
+        env={"PYTHONPATH": str(_SRC), "PATH": "/usr/bin:/bin"},
+    )
+    assert "HYGIENE_OK" in p.stdout, p.stdout + p.stderr

@@ -17,6 +17,7 @@ def _run(script: str, devices: int = 8, timeout: int = 420):
     )
 
 
+@pytest.mark.slow
 def test_gpipe_matches_sequential():
     script = textwrap.dedent("""
         import jax, jax.numpy as jnp, numpy as np
@@ -51,6 +52,7 @@ def test_gpipe_matches_sequential():
     assert "GPIPE_OK" in p.stdout, p.stdout + p.stderr
 
 
+@pytest.mark.slow
 def test_mini_dryrun_in_process():
     """The dry-run machinery end-to-end on a small mesh: lower + compile a
     reduced arch on 8 fake devices, roofline terms finite and positive."""
