@@ -1,0 +1,103 @@
+"""Bench structure gate: the --quick JSON must keep the baseline's shape.
+
+  PYTHONPATH=src python -m benchmarks.check_regression \
+      [--baseline BENCH_baseline.json] [--out /tmp/bench_now.json] [--reuse]
+
+Regenerates the quick benchmark record (subprocess ``benchmarks.run --quick
+--json``) and fails (exit 1) when any *section* or *CSV key* present in the
+committed ``BENCH_baseline.json`` is missing or renamed in the fresh run.
+Numeric values are free to drift — that drift IS the perf trajectory the
+baseline exists to expose — but silently dropping a benchmark row or renaming
+a column would blind every future diff, which is exactly what this gate
+catches. Run (and CI runs it) with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` so the sharded
+device-count sweep rows are present.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import subprocess
+import sys
+from collections import Counter
+
+_NUM = re.compile(r"^-?\d+(\.\d+)?([eE][+-]?\d+)?$")
+
+# Sweep coordinates: numeric, but structural — a row is identified by them
+# (n=65536 vanishing from the construction sweep IS a missing row, not value
+# drift). Measurements (us, Mentries_s, max/avg/...) stay free to drift.
+_PARAMS = frozenset({"n", "m", "devices"})
+
+
+def line_key(line: str) -> str:
+    """Structural key of a CSV line: measurement values are stripped (they
+    may drift); names, non-numeric values (method labels), and sweep
+    coordinates (``_PARAMS``, e.g. ``n=65536``, ``devices=8``) are kept.
+    Paper annotations after ``' | '`` carry no keys."""
+    parts = []
+    for part in line.split(" | ")[0].split(","):
+        part = part.strip()
+        if "=" in part:
+            name, val = part.split("=", 1)
+            keep = name in _PARAMS or not _NUM.match(val.strip())
+            parts.append(part if keep else name)
+        else:
+            parts.append(part)
+    return ",".join(parts)
+
+
+def compare(baseline: dict, fresh: dict) -> list[str]:
+    """Missing/renamed structure in ``fresh`` relative to ``baseline``."""
+    errors = []
+    for section, rec in baseline["sections"].items():
+        if section not in fresh["sections"]:
+            errors.append(f"missing section: {section!r}")
+            continue
+        want = Counter(line_key(l) for l in rec["lines"])
+        have = Counter(line_key(l) for l in fresh["sections"][section]["lines"])
+        for key, cnt in (want - have).items():
+            errors.append(f"[{section}] missing/renamed key x{cnt}: {key!r}")
+    return errors
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="BENCH_baseline.json")
+    ap.add_argument("--out", default="/tmp/bench_now.json")
+    ap.add_argument(
+        "--reuse", action="store_true",
+        help="compare an existing --out file instead of regenerating",
+    )
+    args = ap.parse_args()
+
+    if not args.reuse or not os.path.exists(args.out):
+        cmd = [
+            sys.executable, "-m", "benchmarks.run", "--quick",
+            "--json", args.out,
+        ]
+        print("#", " ".join(cmd), flush=True)
+        proc = subprocess.run(cmd)
+        if proc.returncode != 0:
+            print("bench run failed", file=sys.stderr)
+            return proc.returncode
+
+    with open(args.baseline) as fh:
+        baseline = json.load(fh)
+    with open(args.out) as fh:
+        fresh = json.load(fh)
+
+    errors = compare(baseline, fresh)
+    if errors:
+        print("BENCH STRUCTURE REGRESSION:", file=sys.stderr)
+        for e in errors:
+            print("  -", e, file=sys.stderr)
+        return 1
+    n = sum(len(r["lines"]) for r in baseline["sections"].values())
+    print(f"bench structure OK: {n} baseline rows all present")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

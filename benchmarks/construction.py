@@ -58,8 +58,38 @@ def run(sizes=(1 << 12, 1 << 16, 1 << 20)):
     return rows
 
 
+def run_sharded(sizes=(1 << 12, 1 << 16)):
+    """Cell-partitioned sharded build (repro.dist.forest) across fake-device
+    counts. On one CPU core the fake devices time-slice, so absolute us
+    numbers mostly show the collective overhead; the row structure and the
+    device-count sweep are what CI's bench-regression gate pins. Set
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 for the full sweep."""
+    from jax.sharding import Mesh
+
+    from repro.dist import forest as DF
+
+    rows = []
+    rng = np.random.default_rng(0)
+    devices = jax.devices()
+    counts = [c for c in (1, 2, 4, 8) if c <= len(devices)]
+    for n in sizes:
+        w = jnp.asarray(normalize_weights(rng.random(n) ** 8 + 1e-12))
+        for D in counts:
+            mesh = Mesh(np.asarray(devices[:D]), ("data",))
+
+            def build():
+                f = DF.build_forest_sharded(w, n, mesh=mesh)
+                jax.block_until_ready(f.left)
+
+            t = _time(build, reps=3)
+            rows.append(
+                {"n": n, "devices": D, "us": t * 1e6, "meps": n / t / 1e6}
+            )
+    return rows
+
+
 def main() -> list[str]:
-    return [
+    lines = [
         f"construction,n={r['n']},forest_us={r['forest_us']:.0f},"
         f"alias_vose_us={r['alias_us']:.0f},alias_parallel_us={r['palias_us']:.0f},"
         f"forest_Mentries_s={r['forest_meps']:.2f},"
@@ -67,6 +97,12 @@ def main() -> list[str]:
         f"alias_parallel_Mentries_s={r['palias_meps']:.2f}"
         for r in run()
     ]
+    lines += [
+        f"construction_sharded,n={r['n']},devices={r['devices']},"
+        f"forest_us={r['us']:.0f},forest_Mentries_s={r['meps']:.2f}"
+        for r in run_sharded()
+    ]
+    return lines
 
 
 if __name__ == "__main__":

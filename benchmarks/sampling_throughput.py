@@ -56,10 +56,31 @@ def run(n: int = 1 << 16, m: int | None = None, batch: int = 1 << 16):
     return [(name, us, batch / us) for name, us in rows]
 
 
+def run_sharded(n: int = 1 << 16, batch: int = 1 << 16):
+    """Owner-routed sampling over the cell-partitioned forest across fake-
+    device counts (repro.dist.forest.sample_sharded). Full sweep needs
+    XLA_FLAGS=--xla_force_host_platform_device_count=8."""
+    from jax.sharding import Mesh
+
+    from repro.dist import forest as DF
+
+    rng = np.random.default_rng(0)
+    w = normalize_weights(rng.random(n) ** 12 + 1e-12)
+    xi = jnp.asarray(rng.random(batch), jnp.float32)
+    devices = jax.devices()
+    rows = []
+    for D in (c for c in (1, 2, 4, 8) if c <= len(devices)):
+        mesh = Mesh(np.asarray(devices[:D]), ("data",))
+        sf = DF.build_forest_sharded(jnp.asarray(w), n, mesh=mesh)
+        us = _time(lambda: DF.sample_sharded(sf, xi, mesh=mesh), reps=5)
+        rows.append((f"forest_sharded_d{D}", us, batch / us))
+    return rows
+
+
 def main() -> list[str]:
     return [
         f"throughput,{name},us_per_call={us:.0f},Msamples_s={mps:.2f}"
-        for name, us, mps in run()
+        for name, us, mps in run() + run_sharded()
     ]
 
 

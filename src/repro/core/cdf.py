@@ -16,6 +16,15 @@ import numpy as np
 
 _ONE_MINUS_EPS = np.float32(np.nextafter(np.float32(1.0), np.float32(0.0)))
 
+# Fixed reassociation grid of the prefix sum: the scan is ALWAYS computed as
+# SCAN_CHUNKS independent row scans plus a serial carry over the chunk totals,
+# no matter how many devices execute it. Any shard count dividing SCAN_CHUNKS
+# then performs literally the same float additions (same row lengths, same
+# carry chain), so the distributed scan in ``repro.dist.forest`` is bit-
+# identical to this single-device path — which the forest needs, because tree
+# topology depends on the *bit patterns* of the CDF (XOR distances).
+SCAN_CHUNKS = 8
+
 
 def normalize_weights(w: np.ndarray) -> np.ndarray:
     """Float64 normalization for high-dynamic-range weights.
@@ -30,7 +39,52 @@ def normalize_weights(w: np.ndarray) -> np.ndarray:
     return (w / s).astype(np.float32)
 
 
-def build_cdf(weights: jax.Array) -> jax.Array:
+def scan_chunk_rows(w: jax.Array) -> jax.Array:
+    """(n,) -> (SCAN_CHUNKS, L) zero-padded chunk rows — THE scan grid.
+
+    Single-sourced on purpose: ``chunked_cumsum`` and the sharded feed in
+    :mod:`repro.dist.forest` must agree on this layout exactly or the
+    bit-identity contract between them silently breaks."""
+    n = w.shape[0]
+    L = -(-n // SCAN_CHUNKS)
+    return jnp.pad(w, (0, SCAN_CHUNKS * L - n)).reshape(SCAN_CHUNKS, L)
+
+
+def chunked_cumsum(w: jax.Array, row_scan=None) -> jax.Array:
+    """Inclusive prefix sum over the fixed ``SCAN_CHUNKS`` reassociation grid.
+
+    ``w`` (n,) is zero-padded into ``(SCAN_CHUNKS, L)`` rows; each row is
+    scanned independently (``row_scan``, default row-wise ``jnp.cumsum``; the
+    Pallas path in :mod:`repro.kernels.cdf_scan` is a drop-in), then a serial
+    carry over the chunk totals is added back. Shard count never appears in
+    the arithmetic — see the ``SCAN_CHUNKS`` note for why that matters.
+    """
+    n = w.shape[0]
+    rows = scan_chunk_rows(w)
+    local = jnp.cumsum(rows, axis=-1) if row_scan is None else row_scan(rows)
+    totals = local[:, -1]
+    carry = jnp.concatenate(
+        [jnp.zeros((1,), local.dtype), jnp.cumsum(totals)[:-1]]
+    )
+    return (local + carry[:, None]).reshape(-1)[:n]
+
+
+def finalize_cdf(raw: jax.Array) -> jax.Array:
+    """Raw inclusive scan (n,) -> normalized cdf (n+1,) with exact endpoints.
+
+    Shared by the single-device and sharded builders: given bit-equal raw
+    scans, it produces bit-equal CDFs (divide/clip are elementwise, the
+    monotonicity pass is a ``cummax`` — max is exact, so any execution order
+    agrees)."""
+    total = raw[-1]
+    c = (raw / total).astype(jnp.float32)
+    c = jnp.clip(c, 0.0, 1.0).at[-1].set(1.0)
+    # Enforce monotonicity under float rounding.
+    c = jax.lax.cummax(c)
+    return jnp.concatenate([jnp.zeros((1,), jnp.float32), c])
+
+
+def build_cdf(weights: jax.Array, row_scan=None) -> jax.Array:
     """Normalized inclusive prefix sum with exact 0/1 endpoints.
 
     Returns ``cdf`` of shape ``(n+1,)`` float32 with cdf[0] == 0, cdf[n] == 1.
@@ -39,13 +93,16 @@ def build_cdf(weights: jax.Array) -> jax.Array:
     except on exact boundary hits (measure ~0; see tests).
     """
     w = jnp.asarray(weights, jnp.float32)
-    c = jnp.cumsum(w.astype(jnp.float64) if jax.config.jax_enable_x64 else w)
-    total = c[-1]
-    c = (c / total).astype(jnp.float32)
-    c = jnp.clip(c, 0.0, 1.0).at[-1].set(1.0)
-    # Enforce monotonicity under float rounding.
-    c = jax.lax.cummax(c)
-    return jnp.concatenate([jnp.zeros((1,), jnp.float32), c])
+    if jax.config.jax_enable_x64:
+        # float64 accumulation replaces the chunked grid; the sharded builder
+        # refuses this mode (it cannot reproduce it bit-for-bit).
+        if row_scan is not None:
+            raise ValueError("row_scan is a float32 chunked-scan hook; "
+                             "unsupported with jax_enable_x64")
+        raw = jnp.cumsum(w.astype(jnp.float64))
+    else:
+        raw = chunked_cumsum(w, row_scan=row_scan)
+    return finalize_cdf(raw)
 
 
 def cdf_from_logits(logits: jax.Array, temperature: float = 1.0) -> jax.Array:

@@ -129,65 +129,108 @@ def _nearest_greater(d: jax.Array):
     return dL, L, dR, R
 
 
-@functools.partial(jax.jit, static_argnames=("m", "fallback_slack"))
-def build_forest_from_cdf(
-    cdf: jax.Array, m: int, fallback_slack: int = 2
-) -> RadixForest:
-    """TPU-native massively parallel forest construction (see module doc)."""
-    cdf = jnp.asarray(cdf, jnp.float32)
-    n = cdf.shape[0] - 1
-    data = lower_bounds(cdf)  # (n,)
-    cells = _cells(data, m)
-
+def _separator_distances(data: jax.Array, cells: jax.Array) -> jax.Array:
+    """(n-1,) XOR separator distances; cell crossings clamp to the sentinel."""
     bits = float_to_bits(data)
-    sep_raw = bits[:-1] ^ bits[1:]                      # (n-1,)
+    sep_raw = bits[:-1] ^ bits[1:]
     crossing = cells[:-1] != cells[1:]
+    return jnp.where(crossing, jnp.uint32(DIST_SENTINEL), sep_raw)
+
+
+def _build_cell_trees(
+    data: jax.Array,
+    d: jax.Array,
+    cells: jax.Array,
+    *,
+    m: int,
+    cell_lo,
+    m_local: int,
+    node_offset=0,
+    n_total: int | None = None,
+    fallback_slack: int = 2,
+):
+    """Per-cell radix trees for the guide-cell range [cell_lo, cell_lo+m_local).
+
+    The shared build core of the single-device path (``cell_lo=0,
+    m_local=m``) and the cell-partitioned sharded path
+    (:mod:`repro.dist.forest`). ``data``/``cells``/``d`` are a contiguous
+    window of the global leaf arrays; window index ``w`` is global leaf
+    ``w + node_offset``, and all *stored references* (node ids, leaf refs,
+    ``table``/``cell_first`` entries) are global. ``cell_lo`` may be traced
+    (it is ``axis_index * m_local`` under ``shard_map``); ``m_local`` is
+    static.
+
+    Every edge of a cell's tree stays inside that cell (crossing separators
+    carry the sentinel distance), so a node slot is written only by the cell
+    owning its leaf. Restricting writes to an ownership mask therefore makes
+    partial results from a *disjoint* cell partition combine exactly by
+    elementwise max (``INVALID`` is int32 min): the combination of the shards
+    is bit-identical to the unpartitioned build.
+
+    Returns ``(left, right, table, cell_first, fallback)``: window-sized
+    ``left``/``right`` (unowned slots ``INVALID``) and ``(m_local,)`` per-cell
+    arrays for the owned range.
+    """
+    n = data.shape[0]
+    n_total = n if n_total is None else n_total
     sentinel = jnp.uint32(DIST_SENTINEL)
-    d = jnp.where(crossing, sentinel, sep_raw)          # separator distances
+    cell_lo = jnp.int32(cell_lo)
+    node_offset = jnp.int32(node_offset)
 
-    grid = jnp.arange(m + 1, dtype=jnp.float32) / jnp.float32(m)
+    # Ownership; out-of-range scatter indices route to m_local and drop
+    # (negative indices would wrap, so they must be rewritten, not dropped).
+    loc = cells - cell_lo
+    owned_leaf = (loc >= 0) & (loc < m_local)
+    loc_safe = jnp.where(owned_leaf, loc, m_local)
+
+    grid = (cell_lo + jnp.arange(m_local, dtype=jnp.int32)).astype(
+        jnp.float32
+    ) / jnp.float32(m)
     cell_first = (
-        jnp.searchsorted(data, grid[:-1], side="right").astype(jnp.int32) - 1
+        jnp.searchsorted(data, grid, side="right").astype(jnp.int32) - 1
     )
-    cell_first = jnp.clip(cell_first, 0, n - 1)
-    cell_first = jnp.concatenate([cell_first, jnp.int32(n - 1)[None]])
+    cell_first = jnp.clip(cell_first + node_offset, 0, n_total - 1)
 
-    counts = jnp.zeros((m,), jnp.int32).at[cells].add(1)
-    first_leaf = jnp.full((m,), n, jnp.int32).at[cells].min(
-        jnp.arange(n, dtype=jnp.int32)
+    counts = jnp.zeros((m_local,), jnp.int32).at[loc_safe].add(1, mode="drop")
+    first_leaf = jnp.full((m_local,), n, jnp.int32).at[loc_safe].min(
+        jnp.arange(n, dtype=jnp.int32), mode="drop"
     )
-    f_safe = jnp.clip(first_leaf, 0, n - 1)
-    left_overlap = data[f_safe] > grid[:-1]
+    f_safe = jnp.clip(first_leaf, 0, n - 1)       # window-relative
+    left_overlap = data[f_safe] > grid
     overlap = jnp.where(counts > 0, counts + left_overlap.astype(jnp.int32), 1)
 
     left = jnp.full((n,), INVALID, jnp.int32)
     right = jnp.full((n,), INVALID, jnp.int32)
-    leaf_parent = jnp.full((n,), -1, jnp.int32)   # node id above each leaf
-    node_parent = jnp.full((n,), -1, jnp.int32)   # node id above each node
+    leaf_parent = jnp.full((n,), -1, jnp.int32)   # window-relative node ids
+    node_parent = jnp.full((n,), -1, jnp.int32)
 
     if n > 1:
         dL, _L, dR, _R = _nearest_greater(d)
         k = jnp.arange(n - 1, dtype=jnp.int32)
-        in_cell = ~crossing
+        in_cell = d != sentinel
+        owned_k = owned_leaf[:-1]    # separator k lives in cell cells[k]
         is_root = in_cell & (dL == sentinel) & (dR == sentinel)
         par_is_L = dL <= dR
         parent_sep = jnp.where(par_is_L, _L, _R)
-        parent_node = parent_sep + 1
-        node_id = k + 1
+        parent_node = parent_sep + 1              # window-relative slot
+        node_id = k + 1 + node_offset             # global reference value
 
         # Internal non-root separators -> child of parent separator's node.
-        wr = in_cell & ~is_root & par_is_L        # right child of L
-        wl = in_cell & ~is_root & ~par_is_L       # left child of R
+        wr = owned_k & in_cell & ~is_root & par_is_L    # right child of L
+        wl = owned_k & in_cell & ~is_root & ~par_is_L   # left child of R
         right = right.at[jnp.where(wr, parent_node, n)].set(node_id, mode="drop")
         left = left.at[jnp.where(wl, parent_node, n)].set(node_id, mode="drop")
-        node_parent = node_parent.at[jnp.where(in_cell & ~is_root, node_id, n)].set(
-            parent_node, mode="drop"
-        )
+        node_parent = node_parent.at[
+            jnp.where(owned_k & in_cell & ~is_root, k + 1, n)
+        ].set(parent_node, mode="drop")
 
         # Cell roots -> right child of the cell's root slot.
-        root_slot = first_leaf[cells[jnp.clip(k, 0, n - 1)]]
-        right = right.at[jnp.where(is_root, root_slot, n)].set(node_id, mode="drop")
-        node_parent = node_parent.at[jnp.where(is_root, node_id, n)].set(
+        root_slot = first_leaf[
+            jnp.clip(loc[jnp.clip(k, 0, n - 1)], 0, m_local - 1)
+        ]
+        wroot = owned_k & is_root
+        right = right.at[jnp.where(wroot, root_slot, n)].set(node_id, mode="drop")
+        node_parent = node_parent.at[jnp.where(wroot, k + 1, n)].set(
             root_slot, mode="drop"
         )
 
@@ -201,28 +244,28 @@ def build_forest_from_cdf(
     )
     lone = (dl == sentinel) & (dr == sentinel)
     lpar_is_left = dl <= dr
-    lparent = jnp.where(lpar_is_left, i, i + 1)   # node id (sep i-1 -> node i)
-    leaf_ref = ~i
-    wr = ~lone & lpar_is_left
-    wl = ~lone & ~lpar_is_left
+    lparent = jnp.where(lpar_is_left, i, i + 1)   # node slot (sep i-1 -> node i)
+    leaf_ref = ~(i + node_offset)
+    wr = owned_leaf & ~lone & lpar_is_left
+    wl = owned_leaf & ~lone & ~lpar_is_left
     right = right.at[jnp.where(wr, lparent, n)].set(leaf_ref, mode="drop")
     left = left.at[jnp.where(wl, lparent, n)].set(leaf_ref, mode="drop")
     # Lone leaf: it is its cell's entire tree -> right child of its root slot
     # (which is itself).
-    right = right.at[jnp.where(lone, i, n)].set(leaf_ref, mode="drop")
+    right = right.at[jnp.where(owned_leaf & lone, i, n)].set(leaf_ref, mode="drop")
     leaf_parent = jnp.where(lone, i, lparent)
 
     # Manual left child of every root slot: the interval overlapping the cell
     # from the left (unreachable when the cell starts exactly at a bound).
     nonempty = counts > 0
-    manual = ~jnp.maximum(f_safe - 1, 0)
+    manual = ~jnp.maximum(f_safe + node_offset - 1, 0)
     left = left.at[jnp.where(nonempty, f_safe, n)].set(manual, mode="drop")
 
     # Guide table.
     table = jnp.where(
         counts == 0,
-        ~cell_first[:-1],
-        jnp.where(overlap == 1, ~f_safe, f_safe),
+        ~cell_first,
+        jnp.where(overlap == 1, ~(f_safe + node_offset), f_safe + node_offset),
     ).astype(jnp.int32)
 
     # Traversal depth per leaf -> per-cell fallback flags (paper's degenerate-
@@ -235,12 +278,30 @@ def build_forest_from_cdf(
         anc = jnp.where(live, node_parent[jnp.clip(anc, 0)], anc)
     depth = depth + 1  # the leaf resolution step itself
 
-    cell_depth = jnp.zeros((m,), jnp.int32).at[cells].max(depth)
+    cell_depth = jnp.zeros((m_local,), jnp.int32).at[loc_safe].max(
+        depth, mode="drop"
+    )
     allowed = jnp.ceil(jnp.log2(jnp.maximum(overlap, 2).astype(jnp.float32)))
     fallback = (overlap > 1) & (
         cell_depth > allowed.astype(jnp.int32) + fallback_slack
     )
+    return left, right, table, cell_first, fallback
 
+
+@functools.partial(jax.jit, static_argnames=("m", "fallback_slack"))
+def build_forest_from_cdf(
+    cdf: jax.Array, m: int, fallback_slack: int = 2
+) -> RadixForest:
+    """TPU-native massively parallel forest construction (see module doc)."""
+    cdf = jnp.asarray(cdf, jnp.float32)
+    n = cdf.shape[0] - 1
+    data = lower_bounds(cdf)  # (n,)
+    cells = _cells(data, m)
+    d = _separator_distances(data, cells)
+    left, right, table, cf, fallback = _build_cell_trees(
+        data, d, cells, m=m, cell_lo=0, m_local=m, fallback_slack=fallback_slack
+    )
+    cell_first = jnp.concatenate([cf, jnp.int32(n - 1)[None]])
     return RadixForest(cdf, table, left, right, cell_first, fallback)
 
 

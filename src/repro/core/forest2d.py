@@ -141,6 +141,54 @@ def sample_forest_rows(f: RowForest, row: jax.Array, xi: jax.Array) -> jax.Array
     return flat - row * W   # column within the row
 
 
+def validate_forest_rows(f: RowForest) -> None:
+    """Structural invariants of the flat multi-row forest; AssertionError on
+    violation. The 2-D twin of ``core.forest.validate_forest``: for every
+    (row, cell) the guide entry must resolve within the row, and in-order
+    traversal of a cell tree must enumerate the cell's leaves in increasing
+    order prefixed by the row-clamped left-overlap leaf."""
+    data = np.asarray(f.data)
+    table = np.asarray(f.table)
+    left = np.asarray(f.left)
+    right = np.asarray(f.right)
+    R, W, m = f.rows, f.width, f.m
+    n = R * W
+    local = np.clip(np.floor(data * np.float32(m)).astype(np.int64), 0, m - 1)
+    cells = np.repeat(np.arange(R), W) * m + local
+
+    for c in range(R * m):
+        r = c // m
+        ref = int(table[c])
+        leaves = np.where(cells == c)[0]
+        if ref < 0:
+            i = ~ref
+            assert r * W <= i < (r + 1) * W, (c, i)  # never leaves the row
+            cell_start = (c % m) / m
+            assert data[i] <= cell_start + 1e-7 or (
+                len(leaves) == 1 and leaves[0] == i
+            ), (c, i)
+            continue
+        got: list[int] = []
+        depth_guard = 0
+
+        def walk(j: int) -> None:
+            nonlocal depth_guard
+            depth_guard += 1
+            assert depth_guard < 10_000
+            if j < 0:
+                got.append(~j)
+                return
+            assert 0 <= j < n
+            walk(int(left[j]))
+            walk(int(right[j]))
+
+        walk(ref)
+        f0 = int(leaves[0])
+        expect = [max(f0 - 1, r * W)] + list(leaves)
+        assert got == expect, (c, got, expect)
+        assert all(r * W <= i < (r + 1) * W for i in got), (c, got)
+
+
 def np_reference_rows(cdf_rows: np.ndarray, row: np.ndarray, xi: np.ndarray):
     """searchsorted oracle per lane."""
     out = np.empty(len(xi), np.int64)

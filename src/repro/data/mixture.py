@@ -19,11 +19,23 @@ from repro.core.lds import radical_inverse_base2
 
 
 class MixtureSampler:
-    def __init__(self, weights, m: int | None = None, seed: int = 0):
+    def __init__(self, weights, m: int | None = None, seed: int = 0,
+                 sharded: bool = False, mesh=None):
         w = normalize_weights(np.asarray(weights, np.float64))
         self.weights = w
         m = m or max(len(w), 16)
-        self.forest = build_forest(jnp.asarray(w), m)
+        self.sharded = sharded
+        if sharded:
+            # Opt-in cell-partitioned build/sampling over the mesh data axis
+            # (bit-identical to the single-device path; repro.dist.forest).
+            from repro.dist import forest as DF
+
+            self.forest, self.mesh = DF.build_forest_sharded_auto(
+                jnp.asarray(w), m, mesh=mesh
+            )
+        else:
+            self.mesh = None
+            self.forest = build_forest(jnp.asarray(w), m)
         # Cranley-Patterson rotation so different runs decorrelate while
         # keeping the sequence's low discrepancy.
         self.offset = np.float32(np.random.default_rng(seed).random())
@@ -38,4 +50,10 @@ class MixtureSampler:
         else:
             xi = np.random.default_rng(step).random(n)
         xi = np.asarray(xi, np.float32)
+        if self.sharded:
+            from repro.dist import forest as DF
+
+            return np.asarray(
+                DF.sample_sharded(self.forest, jnp.asarray(xi), mesh=self.mesh)
+            )
         return np.asarray(sample_forest(self.forest, jnp.asarray(xi)))

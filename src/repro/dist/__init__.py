@@ -13,4 +13,7 @@ Submodules (imported lazily by callers; this package import stays light so
   ``lax.ppermute`` (matches sequential execution, differentiable).
 * :mod:`repro.dist.compression` — int8 quantization, error-feedback gradient
   compression, and compressed cross-pod all-reduce.
+* :mod:`repro.dist.forest`      — cell-partitioned sharded radix-tree forest
+  construction + owner-routed sampling (bit-identical to the single-device
+  build; the module docstring states the cell-aligned partitioning contract).
 """

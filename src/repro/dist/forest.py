@@ -1,0 +1,343 @@
+"""Cell-partitioned sharded radix-tree forests (multi-device Sec. 3).
+
+The paper's guide cells make every per-cell radix tree independent: a
+separator that crosses a cell boundary is clamped to the sentinel distance,
+so no tree edge ever crosses a cell. That is exactly a distribution
+boundary — this module partitions the ``m`` guide cells *contiguously* over
+the mesh data axis, and because shard boundaries are aligned to cell
+boundaries, **no cross-device tree edges exist by construction**.
+
+Partitioning contract (load-bearing; tests pin it):
+
+* ``m`` must be divisible by the shard count ``D``. Shard ``d`` owns the
+  cell range ``[d*m/D, (d+1)*m/D)`` — i.e. the value range
+  ``[d/D, (d+1)/D)`` of the unit interval.
+* A node slot (= leaf index) is owned by the shard owning its leaf's cell.
+  Ownership of slots is a disjoint partition, so per-shard partial
+  ``left``/``right`` arrays (unowned slots ``INVALID`` = int32 min) combine
+  exactly by elementwise max — :func:`gather_forest`.
+* All stored references are *global*: child refs, leaf refs (``~i``), guide
+  table entries, and ``cell_first`` use global leaf indices, so gathered or
+  routed results need no re-indexing.
+* The CDF is produced by a **distributed scan** over the fixed
+  ``core.cdf.SCAN_CHUNKS`` reassociation grid: each device scans its chunk
+  rows locally (optionally through the ``kernels.cdf_scan`` Pallas kernel in
+  raw mode), chunk totals are exchanged with an exact ``psum`` scatter-gather
+  (disjoint one-hot support, so the reduction adds zeros — no rounding), and
+  every device re-derives the serial carry chain identically. The carry is
+  deliberately *not* a ``psum`` of totals: a tree reduction has
+  order-dependent rounding, and tree topology depends on CDF *bit patterns*.
+  Result: :func:`build_forest_sharded` is **bit-identical** to the
+  single-device :func:`repro.core.build_forest` for every shard count
+  dividing ``SCAN_CHUNKS`` (the differential conformance suite in
+  ``tests/test_dist_forest.py`` gates this).
+* Sampling routes each uniform to its owning shard arithmetically
+  (``cell id // (m/D)`` — no search), the owner runs the local Algorithm-2
+  descent touching only slots it owns, and results are combined with a
+  masked ``psum`` (each lane has exactly one owner, so the sum is exact).
+
+Known tradeoff, by design (see ROADMAP open items): the nearest-greater
+sweep over separator distances is executed per device over the full index
+window with writes masked to the owned cell range. That keeps every shape
+static under ``shard_map`` (leaf counts per cell range are data-dependent);
+compacting each shard to a capacity-bounded local window (via the
+``node_offset`` parameter of ``core.forest._build_cell_trees``) is the
+follow-on, as is rebalancing shards under uneven cell occupancy.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.cdf import SCAN_CHUNKS, finalize_cdf, lower_bounds, scan_chunk_rows
+from repro.core.forest import (
+    RadixForest,
+    _build_cell_trees,
+    _cells,
+    _separator_distances,
+)
+from repro.core.sample import MAX_DEPTH, _bisect
+
+
+class ShardedForest(NamedTuple):
+    """Guide table + forest, cell-partitioned over ``n_shards`` devices.
+
+    ``table``/``fallback`` are (m,) arrays laid out as the concatenation of
+    the per-shard cell slices (shardable along the data axis); ``left`` /
+    ``right`` are (D, n) with row ``d`` holding shard ``d``'s partial node
+    arrays (unowned slots ``INVALID``); ``cdf``/``cell_first`` are replicated
+    (the cutpoint side tables are needed at shard boundaries)."""
+
+    cdf: jax.Array         # (n+1,) f32, replicated
+    table: jax.Array       # (m,)  i32, cell-sharded
+    left: jax.Array        # (D, n) i32 partial child refs
+    right: jax.Array       # (D, n) i32 partial child refs
+    cell_first: jax.Array  # (m+1,) i32, replicated
+    fallback: jax.Array    # (m,)  bool, cell-sharded
+
+    @property
+    def n(self) -> int:
+        return self.left.shape[1]
+
+    @property
+    def m(self) -> int:
+        return self.table.shape[0]
+
+    @property
+    def n_shards(self) -> int:
+        return self.left.shape[0]
+
+
+def default_mesh(axis: str = "data") -> Mesh:
+    """1-D mesh over every local device (8 fake CPU devices in tests)."""
+    return Mesh(np.array(jax.devices()), (axis,))
+
+
+def cell_partition(m: int, n_shards: int) -> np.ndarray:
+    """Shard boundaries in cell space: shard d owns [b[d], b[d+1])."""
+    if m % n_shards:
+        raise ValueError(f"m={m} must divide over {n_shards} shards")
+    return np.arange(n_shards + 1, dtype=np.int64) * (m // n_shards)
+
+
+def pallas_row_scan(rows: jax.Array) -> jax.Array:
+    """Local chunk-row scan through the Pallas kernel (raw cumsum mode)."""
+    from repro.kernels.cdf_scan import cdf_scan
+
+    return cdf_scan(
+        rows, softmax=False, normalize=False,
+        interpret=jax.default_backend() != "tpu",
+    )
+
+
+def _distributed_raw_scan(w_rows: jax.Array, axis: str, n: int, row_scan=None):
+    """Inside ``shard_map``: (C/D, L) local rows -> (n,) full raw scan.
+
+    Bit-identical to ``core.cdf.chunked_cumsum`` on the concatenated rows:
+    same per-row scans, same serial carry chain (re-derived on every device
+    from the exact psum-gathered totals), same final adds."""
+    Cl, L = w_rows.shape
+    idx = jax.lax.axis_index(axis)
+    local = jnp.cumsum(w_rows, axis=-1) if row_scan is None else row_scan(w_rows)
+    my = idx * Cl + jnp.arange(Cl, dtype=jnp.int32)
+    # Exact all-gather of chunk totals: one-hot scatter + psum only ever adds
+    # zeros to the single contributor.
+    totals = jax.lax.psum(
+        jnp.zeros((SCAN_CHUNKS,), local.dtype).at[my].set(local[:, -1]), axis
+    )
+    carry = jnp.concatenate(
+        [jnp.zeros((1,), local.dtype), jnp.cumsum(totals)[:-1]]
+    )
+    out = local + carry[my, None]
+    full = jax.lax.psum(
+        jnp.zeros((SCAN_CHUNKS, L), local.dtype).at[my].set(out), axis
+    )
+    return full.reshape(-1)[:n]
+
+
+def _shard_count(mesh: Mesh, axis: str) -> int:
+    D = int(mesh.shape[axis])
+    if SCAN_CHUNKS % D:
+        raise ValueError(
+            f"shard count {D} must divide SCAN_CHUNKS={SCAN_CHUNKS}"
+        )
+    if jax.config.jax_enable_x64:
+        # build_cdf switches to float64 accumulation under x64; the chunked
+        # float32 scan cannot reproduce that bit-for-bit, so fail loudly
+        # instead of silently breaking the conformance contract.
+        raise NotImplementedError(
+            "repro.dist.forest requires the float32 chunked scan; "
+            "disable jax_enable_x64"
+        )
+    return D
+
+
+@functools.lru_cache(maxsize=128)
+def _cdf_builder(mesh: Mesh, axis: str, n: int, row_scan):
+    """Cached jitted distributed-CDF program (keyed by mesh/shape)."""
+
+    def shard_fn(w_rows):
+        return finalize_cdf(_distributed_raw_scan(w_rows, axis, n, row_scan))
+
+    return jax.jit(shard_map(
+        shard_fn, mesh=mesh, in_specs=P(axis), out_specs=P(), check_rep=False
+    ))
+
+
+def build_cdf_sharded(
+    weights: jax.Array, mesh: Mesh | None = None, axis: str = "data",
+    row_scan=None,
+) -> jax.Array:
+    """Distributed CDF build: local chunk scans + exact cross-device carry.
+
+    Returns the replicated (n+1,) cdf, bit-identical to
+    ``core.cdf.build_cdf(weights, row_scan=row_scan)``."""
+    mesh = mesh if mesh is not None else default_mesh(axis)
+    _shard_count(mesh, axis)
+    w = jnp.asarray(weights, jnp.float32)
+    return _cdf_builder(mesh, axis, int(w.shape[0]), row_scan)(scan_chunk_rows(w))
+
+
+def build_forest_sharded(
+    weights: jax.Array,
+    m: int,
+    mesh: Mesh | None = None,
+    axis: str = "data",
+    fallback_slack: int = 2,
+    row_scan=None,
+) -> ShardedForest:
+    """Distributed scan -> per-shard cell-range tree build, one shard_map.
+
+    Each device derives the full CDF from the distributed scan, then builds
+    only the trees of its own cell range (writes masked by ownership), with
+    node ids in the global index space. Gathering the partials
+    (:func:`gather_forest`) is bit-identical to ``core.build_forest``."""
+    mesh = mesh if mesh is not None else default_mesh(axis)
+    D = _shard_count(mesh, axis)
+    if m % D:
+        raise ValueError(f"m={m} must divide over the {D}-way cell partition")
+    w = jnp.asarray(weights, jnp.float32)
+    n = int(w.shape[0])
+    cdf, table, left, right, cf, fb = _forest_builder(
+        mesh, axis, m, n, fallback_slack, row_scan
+    )(scan_chunk_rows(w))
+    cell_first = jnp.concatenate([cf, jnp.asarray([n - 1], jnp.int32)])
+    return ShardedForest(cdf, table, left, right, cell_first, fb)
+
+
+@functools.lru_cache(maxsize=128)
+def _forest_builder(
+    mesh: Mesh, axis: str, m: int, n: int, fallback_slack: int, row_scan
+):
+    """Cached jitted sharded-build program (keyed by mesh/shape params)."""
+    m_local = m // int(mesh.shape[axis])
+
+    def shard_fn(w_rows):
+        raw = _distributed_raw_scan(w_rows, axis, n, row_scan)
+        cdf = finalize_cdf(raw)
+        data = lower_bounds(cdf)
+        cells = _cells(data, m)
+        d = _separator_distances(data, cells)
+        cell_lo = jax.lax.axis_index(axis) * m_local
+        left, right, table, cf, fb = _build_cell_trees(
+            data, d, cells, m=m, cell_lo=cell_lo, m_local=m_local,
+            fallback_slack=fallback_slack,
+        )
+        return cdf, table, left[None], right[None], cf, fb
+
+    return jax.jit(shard_map(
+        shard_fn, mesh=mesh, in_specs=P(axis),
+        out_specs=(P(), P(axis), P(axis), P(axis), P(axis), P(axis)),
+        check_rep=False,
+    ))
+
+
+def build_forest_sharded_auto(
+    weights: jax.Array,
+    m: int,
+    mesh: Mesh | None = None,
+    axis: str = "data",
+    fallback_slack: int = 2,
+) -> tuple[ShardedForest, Mesh]:
+    """Caller-friendly build: default mesh over all devices and ``m`` rounded
+    up to the next shard multiple (the cell-aligned partition needs D | m).
+    The shared glue for opt-in call sites (``serve.sampler.ForestSampler``,
+    ``data.mixture.MixtureSampler``); returns the forest and the mesh to
+    sample with."""
+    mesh = mesh if mesh is not None else default_mesh(axis)
+    D = int(mesh.shape[axis])
+    m = -(-m // D) * D
+    return (
+        build_forest_sharded(
+            weights, m, mesh=mesh, axis=axis, fallback_slack=fallback_slack
+        ),
+        mesh,
+    )
+
+
+def sample_sharded(
+    forest: ShardedForest,
+    xi: jax.Array,
+    mesh: Mesh | None = None,
+    axis: str = "data",
+    use_fallback: bool = True,
+) -> jax.Array:
+    """Algorithm 2 over the sharded forest: owner-routed local descent.
+
+    Each uniform's owning shard is pure arithmetic (``cell // (m/D)``); the
+    owner resolves it against its local partial node arrays (every edge of an
+    owned cell's tree stays inside the shard) and the per-lane results merge
+    with a masked ``psum`` — exact, because every lane has exactly one owner.
+    Elementwise identical to ``core.sample.sample_forest`` on the gathered
+    forest. Returns global interval ids, replicated."""
+    mesh = mesh if mesh is not None else default_mesh(axis)
+    D = int(mesh.shape[axis])
+    if forest.n_shards != D:
+        raise ValueError(
+            f"forest has {forest.n_shards} shards but mesh axis has {D}"
+        )
+    return _sampler(mesh, axis, forest.m, forest.n, use_fallback)(
+        forest.table, forest.left, forest.right, forest.fallback,
+        forest.cdf, forest.cell_first, jnp.asarray(xi, jnp.float32),
+    )
+
+
+@functools.lru_cache(maxsize=128)
+def _sampler(mesh: Mesh, axis: str, m: int, n: int, use_fallback: bool):
+    """Cached jitted owner-routed sampling program."""
+    m_local = m // int(mesh.shape[axis])
+
+    def shard_fn(table_l, left_l, right_l, fb_l, cdf, cell_first, xi):
+        idx = jax.lax.axis_index(axis)
+        left_l, right_l = left_l[0], right_l[0]
+        g = jnp.clip(jnp.floor(xi * jnp.float32(m)).astype(jnp.int32), 0, m - 1)
+        cell_lo = idx * m_local
+        owned = (g >= cell_lo) & (g < cell_lo + m_local)
+        gl = jnp.clip(g - cell_lo, 0, m_local - 1)
+        j = jnp.where(owned, table_l[gl], jnp.int32(-1))
+
+        if use_fallback:
+            fb = owned & fb_l[gl] & (j >= 0)
+            bal = _bisect(cdf, xi, cell_first[g], cell_first[g + 1], 32)
+            j = jnp.where(fb, ~bal, j)
+
+        def cond(state):
+            j, it = state
+            return jnp.any(j >= 0) & (it < MAX_DEPTH)
+
+        def body(state):
+            j, it = state
+            jj = jnp.clip(j, 0, n - 1)
+            go_left = xi < cdf[jj]
+            nxt = jnp.where(go_left, left_l[jj], right_l[jj])
+            return jnp.where(j >= 0, nxt, j), it + 1
+
+        j, _ = jax.lax.while_loop(cond, body, (j, jnp.int32(0)))
+        return jax.lax.psum(jnp.where(owned, ~j, 0), axis)
+
+    return jax.jit(shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(P(axis), P(axis), P(axis), P(axis), P(), P(), P()),
+        out_specs=P(), check_rep=False,
+    ))
+
+
+def gather_forest(forest: ShardedForest) -> RadixForest:
+    """Combine the per-shard partials into a single-device ``RadixForest``.
+
+    Slot ownership is disjoint and ``INVALID`` is the int32 minimum, so an
+    elementwise max over the shard axis is the exact union of the writes."""
+    return RadixForest(
+        forest.cdf,
+        forest.table,
+        jnp.max(forest.left, axis=0),
+        jnp.max(forest.right, axis=0),
+        forest.cell_first,
+        forest.fallback,
+    )

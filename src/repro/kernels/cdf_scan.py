@@ -72,17 +72,26 @@ def _scan_kernel(x_ref, m_ref, s_ref, o_ref, c_ref, *, softmax: bool):
 
 
 @functools.partial(
-    jax.jit, static_argnames=("softmax", "block_rows", "block_cols", "interpret")
+    jax.jit,
+    static_argnames=("softmax", "normalize", "block_rows", "block_cols", "interpret"),
 )
 def cdf_scan(
     x: jax.Array,
     softmax: bool = True,
+    normalize: bool = True,
     block_rows: int = 8,
     block_cols: int = 512,
     interpret: bool = True,
 ) -> jax.Array:
     """(B, V) logits (softmax=True) or non-negative weights (False) ->
-    (B, V) inclusive CDF rows, last element ~1.0 (leading 0 omitted)."""
+    (B, V) inclusive CDF rows, last element ~1.0 (leading 0 omitted).
+
+    ``normalize=False`` (weights mode only) skips the stats pass and emits the
+    raw inclusive row cumsum — the local scan of the distributed CDF build
+    (``repro.dist.forest``): row totals are exchanged across devices and the
+    carry is applied there, so the kernel must not divide."""
+    if softmax and not normalize:
+        raise ValueError("normalize=False requires softmax=False (raw cumsum)")
     B, V = x.shape
     R, T = block_rows, block_cols
     Bp = (B + R - 1) // R * R
@@ -91,24 +100,29 @@ def cdf_scan(
     xp = jnp.pad(x, ((0, Bp - B), (0, Vp - V)), constant_values=pad_val)
     grid = (Bp // R, Vp // T)
 
-    m, s = pl.pallas_call(
-        functools.partial(_stats_kernel, softmax=softmax),
-        grid=grid,
-        in_specs=[pl.BlockSpec((R, T), lambda i, j: (i, j))],
-        out_specs=[
-            pl.BlockSpec((R, 1), lambda i, j: (i, 0)),
-            pl.BlockSpec((R, 1), lambda i, j: (i, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((Bp, 1), jnp.float32),
-            jax.ShapeDtypeStruct((Bp, 1), jnp.float32),
-        ],
-        scratch_shapes=[
-            pltpu.VMEM((R, 1), jnp.float32),
-            pltpu.VMEM((R, 1), jnp.float32),
-        ],
-        interpret=interpret,
-    )(xp)
+    if normalize:
+        m, s = pl.pallas_call(
+            functools.partial(_stats_kernel, softmax=softmax),
+            grid=grid,
+            in_specs=[pl.BlockSpec((R, T), lambda i, j: (i, j))],
+            out_specs=[
+                pl.BlockSpec((R, 1), lambda i, j: (i, 0)),
+                pl.BlockSpec((R, 1), lambda i, j: (i, 0)),
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct((Bp, 1), jnp.float32),
+                jax.ShapeDtypeStruct((Bp, 1), jnp.float32),
+            ],
+            scratch_shapes=[
+                pltpu.VMEM((R, 1), jnp.float32),
+                pltpu.VMEM((R, 1), jnp.float32),
+            ],
+            interpret=interpret,
+        )(xp)
+    else:
+        # raw mode: s == 1 makes the scan kernel's division exact identity
+        m = jnp.zeros((Bp, 1), jnp.float32)
+        s = jnp.ones((Bp, 1), jnp.float32)
 
     out = pl.pallas_call(
         functools.partial(_scan_kernel, softmax=softmax),

@@ -22,7 +22,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _forest_kernel(cdf_ref, table_ref, left_ref, right_ref, xi_ref, o_ref, *, depth: int, m: int):
+def _forest_kernel(
+    cdf_ref, table_ref, left_ref, right_ref, *rest, depth: int, m: int, fb: bool
+):
+    if fb:
+        cf_ref, fb_ref, xi_ref, o_ref = rest
+    else:
+        xi_ref, o_ref = rest
     xi = xi_ref[...]
     n = left_ref.shape[0]
     g = jnp.clip(jnp.floor(xi * jnp.float32(m)).astype(jnp.int32), 0, m - 1)
@@ -30,6 +36,19 @@ def _forest_kernel(cdf_ref, table_ref, left_ref, right_ref, xi_ref, o_ref, *, de
     cdf = cdf_ref[...]
     left = left_ref[...]
     right = right_ref[...]
+
+    if fb:
+        # Pre-resolve lanes in degenerate cells by balanced index bisection
+        # (the paper's logarithmic-worst-case guard) — without this, tied
+        # zero-width chains exceed any fixed `depth` and the descent below
+        # returns an unresolved internal node. The SAME _bisect as
+        # core.sample.sample_forest, so elementwise agreement is structural.
+        from repro.core.sample import _bisect
+
+        flagged = (jnp.take(fb_ref[...], g, axis=0) > 0) & (j >= 0)
+        cf = cf_ref[...]
+        bal = _bisect(cdf, xi, jnp.take(cf, g, axis=0), jnp.take(cf, g + 1, axis=0), 32)
+        j = jnp.where(flagged, ~bal, j)
 
     def body(_, j):
         jj = jnp.clip(j, 0, n - 1)
@@ -48,29 +67,38 @@ def forest_sample(
     left: jax.Array,
     right: jax.Array,
     xi: jax.Array,
+    cell_first: jax.Array | None = None,
+    fallback: jax.Array | None = None,
     depth: int = 40,
     block: int = 2048,
     interpret: bool = True,
 ) -> jax.Array:
-    """Batch Algorithm 2. xi (B,) -> interval indices (B,) int32."""
+    """Batch Algorithm 2. xi (B,) -> interval indices (B,) int32.
+
+    Passing ``cell_first``/``fallback`` (as built by ``build_forest``)
+    enables the degenerate-cell pre-resolution; without them the fixed-trip
+    descent can return garbage for flagged cells (tied-weight chains deeper
+    than ``depth``)."""
     (B,) = xi.shape
     m = table.shape[0]
     n = left.shape[0]
+    fb = cell_first is not None and fallback is not None
     Bp = (B + block - 1) // block * block
     xip = jnp.pad(xi, (0, Bp - B))
     full = lambda size: pl.BlockSpec((size,), lambda i: (0,))
+    in_specs = [full(n + 1), full(m), full(n), full(n)]
+    operands = [cdf, table, left, right]
+    if fb:
+        in_specs += [full(m + 1), full(m)]
+        operands += [cell_first, fallback.astype(jnp.int32)]
+    in_specs.append(pl.BlockSpec((block,), lambda i: (i,)))
+    operands.append(xip)
     out = pl.pallas_call(
-        functools.partial(_forest_kernel, depth=depth, m=m),
+        functools.partial(_forest_kernel, depth=depth, m=m, fb=fb),
         grid=(Bp // block,),
-        in_specs=[
-            full(n + 1),
-            full(m),
-            full(n),
-            full(n),
-            pl.BlockSpec((block,), lambda i: (i,)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((block,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((Bp,), jnp.int32),
         interpret=interpret,
-    )(cdf, table, left, right, xip)
+    )(*operands)
     return out[:B]

@@ -39,13 +39,23 @@ def sample_rows(cdf_rows: jax.Array, xi: jax.Array, use_pallas: bool = True) -> 
 
 
 def forest_sample(forest: RadixForest, xi: jax.Array, use_pallas: bool = True) -> jax.Array:
-    """Shared-distribution Algorithm 2 over a batch of uniforms."""
+    """Shared-distribution Algorithm 2 over a batch of uniforms.
+
+    When the build flagged degenerate (tied-weight) cells, both paths get the
+    forest's ``cell_first``/``fallback`` side tables so those lanes
+    pre-resolve by bisection instead of running past the fixed trip count.
+    Well-conditioned forests (no flagged cell — the common case) skip the
+    side tables and the 32-trip pre-resolution entirely; this boundary is
+    not jitted, so the concrete-flag check costs one small reduction."""
+    degenerate = bool(jax.device_get(forest.fallback.any()))
+    cf = forest.cell_first if degenerate else None
+    fb = forest.fallback if degenerate else None
     if not use_pallas:
         return ref.ref_forest_sample(
-            forest.cdf, forest.table, forest.left, forest.right, xi
+            forest.cdf, forest.table, forest.left, forest.right, xi, cf, fb
         )
     return _forest_sample(
-        forest.cdf, forest.table, forest.left, forest.right, xi,
+        forest.cdf, forest.table, forest.left, forest.right, xi, cf, fb,
         interpret=_interpret(),
     )
 

@@ -31,12 +31,24 @@ def ref_sample_rows(cdf_rows: jax.Array, xi: jax.Array) -> jax.Array:
     return jax.vmap(one)(cdf_rows, xi)
 
 
-def ref_forest_sample(cdf, table, left, right, xi, depth: int = 64) -> jax.Array:
-    """Oracle for kernels.forest_sample.forest_sample (no-fallback Alg. 2)."""
+def ref_forest_sample(
+    cdf, table, left, right, xi, cell_first=None, fallback=None, depth: int = 64
+) -> jax.Array:
+    """Oracle for kernels.forest_sample.forest_sample (same optional
+    degenerate-cell pre-resolution as the kernel)."""
     n = left.shape[0]
     m = table.shape[0]
     g = jnp.clip(jnp.floor(xi * jnp.float32(m)).astype(jnp.int32), 0, m - 1)
     j = table[g]
+
+    if cell_first is not None and fallback is not None:
+        # Same pre-resolution as core.sample.sample_forest — literally the
+        # same bisection, so elementwise agreement is structural.
+        from repro.core.sample import _bisect
+
+        flagged = fallback[g] & (j >= 0)
+        bal = _bisect(cdf, xi, cell_first[g], cell_first[g + 1], 32)
+        j = jnp.where(flagged, ~bal, j)
 
     def body(_, j):
         jj = jnp.clip(j, 0, n - 1)

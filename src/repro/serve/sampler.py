@@ -17,7 +17,9 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core import build_forest, sample_forest
 from repro.core.alias import build_alias, sample_alias
+from repro.core.cdf import normalize_weights
 from repro.core.lds import radical_inverse_base2
 from repro.kernels import ops
 
@@ -39,6 +41,43 @@ class QmcStreams:
         ) % 1.0
         self.counters[slots] += 1
         return xi.astype(np.float32)
+
+
+class ForestSampler:
+    """Shared-distribution serving sampler: ONE static distribution (draft
+    prior, data mixture, env-map row), many draws per step — the paper's
+    amortized workload behind a serving-shaped API.
+
+    Builds the radix forest once at construction; every ``sample`` call
+    inverts the CDF at the slots' QMC streams (monotone warp, so the
+    stratification survives). ``sharded=True`` opts into the cell-partitioned
+    :mod:`repro.dist.forest` path: guide cells are partitioned over the mesh
+    data axis and each draw is resolved by its owning shard (bit-identical to
+    the single-device path — the dist conformance suite gates that)."""
+
+    def __init__(self, weights, m: int | None = None, sharded: bool = False,
+                 mesh=None, n_slots: int = 64, seed: int = 0):
+        w = normalize_weights(np.asarray(weights, np.float64))
+        m = m or max(len(w), 16)
+        self.sharded = sharded
+        self.streams = QmcStreams(n_slots, seed)
+        if sharded:
+            from repro.dist import forest as DF  # lazy: serve stays importable
+
+            self.forest, self.mesh = DF.build_forest_sharded_auto(
+                jnp.asarray(w), m, mesh=mesh
+            )
+        else:
+            self.mesh = None
+            self.forest = build_forest(jnp.asarray(w), m)
+
+    def sample(self, slots: np.ndarray) -> np.ndarray:
+        xi = jnp.asarray(self.streams.next(slots))
+        if self.sharded:
+            from repro.dist import forest as DF
+
+            return np.asarray(DF.sample_sharded(self.forest, xi, mesh=self.mesh))
+        return np.asarray(sample_forest(self.forest, xi))
 
 
 class TokenSampler:

@@ -47,6 +47,54 @@ def test_throughput_bench_runs():
     assert {"binary_search", "forest_alg2", "alias"} <= names
 
 
+def test_construction_sharded_bench_runs():
+    from benchmarks.construction import run_sharded
+
+    rows = run_sharded(sizes=(1 << 10,))
+    assert rows and all(r["us"] > 0 for r in rows)
+    assert rows[0]["devices"] == 1  # sweep always includes the 1-shard row
+
+
+def test_throughput_sharded_bench_runs():
+    from benchmarks.sampling_throughput import run_sharded
+
+    rows = run_sharded(n=1 << 10, batch=1 << 12)
+    assert any(name.startswith("forest_sharded_d") for name, _, _ in rows)
+
+
+def test_bench_regression_key_extraction():
+    """The CI structure gate: numeric values are stripped, labels and
+    non-numeric values are kept, and the comparator flags missing/renamed
+    keys but tolerates value drift and extra rows."""
+    from benchmarks.check_regression import compare, line_key
+
+    assert (
+        line_key("construction,n=4096,forest_us=7628,forest_Mentries_s=0.54")
+        == "construction,n=4096,forest_us,forest_Mentries_s"
+    )
+    assert (
+        line_key("table1,i^20,cutpoint+binary,max=9,avg=1.23 | paper: max=8")
+        == "table1,i^20,cutpoint+binary,max,avg"
+    )
+    assert line_key("construction_sharded,n=65536,devices=8,forest_us=12") == (
+        "construction_sharded,n=65536,devices=8,forest_us"
+    )
+
+    base = {"sections": {"S": {"lines": ["a,n=1,x=2", "a,n=9,x=3", "b,y=1"]}}}
+    ok = {"sections": {"S": {"lines": ["a,n=1,x=9", "a,n=9,x=0", "b,y=7",
+                                       "c,z=1"]}}}
+    assert compare(base, ok) == []
+    # a sweep coordinate disappearing is a missing row, not value drift
+    missing_coord = {"sections": {"S": {"lines": ["a,n=1,x=9", "a,n=1,x=3",
+                                                  "b,y=7"]}}}
+    assert any("a,n=9,x" in e for e in compare(base, missing_coord))
+    renamed = {"sections": {"S": {"lines": ["a,n=1,x2=9", "a,n=9,x2=0",
+                                            "b,y=7"]}}}
+    assert compare(base, renamed)
+    missing_section = {"sections": {}}
+    assert any("missing section" in e for e in compare(base, missing_section))
+
+
 def test_serving_diversity_qmc_wins():
     from benchmarks.serving_diversity import run
 

@@ -1,0 +1,262 @@
+"""Differential conformance suite for ``repro.dist.forest``.
+
+The contract under test (module docstring of ``repro.dist.forest``): the
+cell-partitioned sharded build is **bit-identical** to the single-device
+``build_forest`` (cdf/table/left/right/cell_first/fallback after gather), and
+owner-routed ``sample_sharded`` agrees **elementwise** with ``sample_forest``
+on shared uniforms — plus chi-square goodness of fit and device-count
+determinism (1 vs 8 shards).
+
+The 8-fake-device matrix runs in subprocesses (``slow`` lane: each pays a
+fresh jax init). The in-process tests run at whatever device count this
+process's jax has (8 in CI via ``XLA_FLAGS``, 1 locally) so the routing and
+combination logic is exercised in the fast lane too.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import Mesh
+
+from repro.core import (
+    build_forest,
+    forest_to_numpy,
+    sample_forest,
+    validate_forest,
+)
+from repro.core.cdf import build_cdf
+from repro.dist import forest as DF
+
+_KEYS = ("cdf", "table", "left", "right", "cell_first", "fallback")
+
+
+def _mesh() -> Mesh:
+    D = max(d for d in (1, 2, 4, 8) if d <= jax.device_count())
+    return Mesh(np.array(jax.devices()[:D]), ("data",))
+
+
+def _run(script: str, devices: int = 8, timeout: int = 900):
+    env = dict(os.environ, PYTHONPATH="src")
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    return subprocess.run(
+        [sys.executable, "-c", script], capture_output=True, text=True,
+        env=env, cwd=os.getcwd(), timeout=timeout,
+    )
+
+
+# ------------------------------------------------------- in-process coverage
+
+
+def test_cell_partition_contract():
+    assert list(DF.cell_partition(64, 8)) == [0, 8, 16, 24, 32, 40, 48, 56, 64]
+    assert list(DF.cell_partition(8, 1)) == [0, 8]
+    with pytest.raises(ValueError):
+        DF.cell_partition(10, 4)
+
+
+def test_sharded_build_bit_identical_inprocess():
+    """Build + gather == single-device build, bit for bit, at this process's
+    device count; sampling agrees elementwise on shared uniforms."""
+    mesh = _mesh()
+    rng = np.random.default_rng(0)
+    for n, m in [(13, 8), (300, 8), (300, 64), (257, 64)]:
+        w = rng.random(n).astype(np.float32) ** 8 + np.float32(1e-9)
+        f1 = build_forest(jnp.asarray(w), m)
+        sf = DF.build_forest_sharded(jnp.asarray(w), m, mesh=mesh)
+        fg = DF.gather_forest(sf)
+        a, b = forest_to_numpy(f1), forest_to_numpy(fg)
+        for k in _KEYS:
+            assert np.array_equal(a[k], b[k]), (n, m, k)
+        validate_forest(fg)
+        xi = rng.random(512).astype(np.float32)
+        s1 = np.asarray(sample_forest(f1, jnp.asarray(xi)))
+        s2 = np.asarray(DF.sample_sharded(sf, jnp.asarray(xi), mesh=mesh))
+        assert np.array_equal(s1, s2), (n, m)
+
+
+def test_build_cdf_sharded_bit_identical():
+    mesh = _mesh()
+    rng = np.random.default_rng(3)
+    for n in (1, 2, 13, 300, 4096):
+        w = rng.random(n).astype(np.float32) + np.float32(1e-3)
+        a = np.asarray(build_cdf(jnp.asarray(w)))
+        b = np.asarray(DF.build_cdf_sharded(jnp.asarray(w), mesh=mesh))
+        assert np.array_equal(a.view(np.uint32), b.view(np.uint32)), n
+
+
+def test_indivisible_m_raises():
+    mesh = _mesh()
+    D = int(mesh.shape["data"])
+    if D == 1:
+        pytest.skip("every m divides a 1-way partition")
+    w = jnp.asarray(np.random.default_rng(0).random(16), jnp.float32)
+    with pytest.raises(ValueError):
+        DF.build_forest_sharded(w, D + 1, mesh=mesh)
+
+
+def test_shard_count_mismatch_raises():
+    if jax.device_count() < 2:
+        pytest.skip("needs >= 2 devices for two distinct shard counts")
+    mesh1 = Mesh(np.array(jax.devices()[:1]), ("data",))
+    w = jnp.asarray(np.random.default_rng(0).random(32), jnp.float32)
+    sf = DF.build_forest_sharded(w, 8, mesh=mesh1)
+    with pytest.raises(ValueError):
+        DF.sample_sharded(sf, jnp.zeros((4,), jnp.float32), mesh=_mesh())
+
+
+def test_forest_sampler_sharded_serve_path():
+    """serve.sampler.ForestSampler: the opt-in sharded guide path must draw
+    exactly what the single-device path draws (same QMC streams, bit-identical
+    forest)."""
+    from repro.serve.sampler import ForestSampler
+
+    w = np.random.default_rng(5).random(96) ** 6 + 1e-6
+    a = ForestSampler(w, m=64, sharded=False, seed=2)
+    b = ForestSampler(w, m=64, sharded=True, mesh=_mesh(), seed=2)
+    slots = np.arange(32)
+    for _ in range(4):
+        assert np.array_equal(a.sample(slots), b.sample(slots))
+
+
+def test_mixture_sampler_sharded_matches():
+    from repro.data.mixture import MixtureSampler
+
+    w = np.random.default_rng(9).random(24) + 1e-3
+    a = MixtureSampler(w, m=64, seed=1)
+    b = MixtureSampler(w, m=64, seed=1, sharded=True, mesh=_mesh())
+    for step in (0, 7):
+        assert np.array_equal(a.sample(step, 256), b.sample(step, 256))
+
+
+# ------------------------------------------- 8-fake-device matrix (slow lane)
+
+_FAMILIES = textwrap.dedent("""
+    import numpy as np
+
+    KINDS = ("uniform", "powerlaw", "ties", "zeros", "wide", "single")
+
+    def fuzz_weights(kind, n, rng):
+        if kind == "uniform":
+            return rng.random(n).astype(np.float32) + np.float32(1e-3)
+        if kind == "powerlaw":
+            return (rng.random(n).astype(np.float32) ** 8) + np.float32(1e-9)
+        if kind == "ties":
+            base = rng.random(max(n // 8, 1)).astype(np.float32) + np.float32(1e-3)
+            return base[rng.integers(0, len(base), n)]
+        if kind == "zeros":
+            w = rng.random(n).astype(np.float32)
+            w[rng.random(n) < 0.5] = 0.0
+            w[rng.integers(0, n)] = 1.0
+            return w
+        if kind == "wide":
+            return (10.0 ** rng.uniform(-30, 30, n)).astype(np.float32)
+        return rng.random(1).astype(np.float32) + np.float32(0.5)
+""")
+
+
+@pytest.mark.slow
+def test_conformance_matrix_8dev():
+    """The acceptance gate: PR-1 fuzz families x m in {8, 64, 1024} on 8 fake
+    devices — bit-identical build, elementwise-identical sampling."""
+    script = _FAMILIES + textwrap.dedent("""
+        import jax, jax.numpy as jnp
+        from repro.core import build_forest, forest_to_numpy, sample_forest
+        from repro.dist import forest as DF
+
+        KEYS = ("cdf", "table", "left", "right", "cell_first", "fallback")
+        mesh = DF.default_mesh()
+        assert int(mesh.shape["data"]) == 8
+        checked = 0
+        for m in (8, 64, 1024):
+            rng = np.random.default_rng(m)
+            for kind in KINDS:
+                for n in (1,) if kind == "single" else (2, 13, 300):
+                    w = fuzz_weights(kind, n, rng)
+                    f1 = build_forest(jnp.asarray(w), m)
+                    sf = DF.build_forest_sharded(jnp.asarray(w), m, mesh=mesh)
+                    fg = DF.gather_forest(sf)
+                    a, b = forest_to_numpy(f1), forest_to_numpy(fg)
+                    for k in KEYS:
+                        assert np.array_equal(a[k], b[k]), (kind, n, m, k)
+                    xi = jnp.asarray(rng.random(512).astype(np.float32))
+                    s1 = np.asarray(sample_forest(f1, xi))
+                    s2 = np.asarray(DF.sample_sharded(sf, xi, mesh=mesh))
+                    assert np.array_equal(s1, s2), (kind, n, m)
+                    checked += 1
+        print("CONFORMANCE_OK", checked)
+    """)
+    p = _run(script)
+    assert "CONFORMANCE_OK" in p.stdout, p.stdout[-2000:] + p.stderr[-4000:]
+
+
+@pytest.mark.slow
+def test_chi_square_and_device_count_determinism_8dev():
+    """sample_sharded draws follow the input weights (chi-square), and 1 vs 8
+    shards produce identical forests AND identical samples for identical xi."""
+    script = textwrap.dedent("""
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import Mesh
+        from repro.core import forest_to_numpy
+        from repro.core.cdf import normalize_weights
+        from repro.dist import forest as DF
+
+        rng = np.random.default_rng(7)
+        p = normalize_weights(rng.random(64) ** 4 + 1e-4)
+        m = 64
+        mesh8 = DF.default_mesh()
+        mesh1 = Mesh(np.array(jax.devices()[:1]), ("data",))
+        sf8 = DF.build_forest_sharded(jnp.asarray(p), m, mesh=mesh8)
+        sf1 = DF.build_forest_sharded(jnp.asarray(p), m, mesh=mesh1)
+        g8, g1 = DF.gather_forest(sf8), DF.gather_forest(sf1)
+        a, b = forest_to_numpy(g8), forest_to_numpy(g1)
+        for k in ("cdf", "table", "left", "right", "cell_first", "fallback"):
+            assert np.array_equal(a[k], b[k]), k
+
+        n_samples = 1 << 16
+        xi = jnp.asarray(rng.random(n_samples).astype(np.float32))
+        d8 = np.asarray(DF.sample_sharded(sf8, xi, mesh=mesh8))
+        d1 = np.asarray(DF.sample_sharded(sf1, xi, mesh=mesh1))
+        assert np.array_equal(d8, d1)
+
+        counts = np.bincount(d8, minlength=64)
+        expected = p * n_samples
+        chi2 = float(np.sum((counts - expected) ** 2 / np.maximum(expected, 1e-9)))
+        # 63 dof: mean 63, sd ~11; 200 is a ~12-sigma regression guard
+        assert chi2 < 200, chi2
+        print("CHI2_OK", round(chi2, 1))
+    """)
+    p = _run(script)
+    assert "CHI2_OK" in p.stdout, p.stdout[-2000:] + p.stderr[-4000:]
+
+
+@pytest.mark.slow
+def test_pallas_scan_route_8dev():
+    """The kernels/cdf_scan raw-mode local scan: sharded and single-device
+    paths through the SAME row-scan implementation stay bit-identical."""
+    script = textwrap.dedent("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import build_forest_from_cdf, forest_to_numpy
+        from repro.core.cdf import build_cdf
+        from repro.dist import forest as DF
+
+        rng = np.random.default_rng(11)
+        w = jnp.asarray(rng.random(700).astype(np.float32) ** 6 + 1e-9)
+        c1 = np.asarray(build_cdf(w, row_scan=DF.pallas_row_scan))
+        c2 = np.asarray(DF.build_cdf_sharded(w, row_scan=DF.pallas_row_scan))
+        assert np.array_equal(c1.view(np.uint32), c2.view(np.uint32))
+
+        f1 = build_forest_from_cdf(jnp.asarray(c1), 64)
+        sf = DF.build_forest_sharded(w, 64, row_scan=DF.pallas_row_scan)
+        b = forest_to_numpy(DF.gather_forest(sf))
+        a = forest_to_numpy(f1)
+        for k in ("cdf", "table", "left", "right", "cell_first", "fallback"):
+            assert np.array_equal(a[k], b[k]), k
+        print("PALLAS_ROUTE_OK")
+    """)
+    p = _run(script)
+    assert "PALLAS_ROUTE_OK" in p.stdout, p.stdout[-2000:] + p.stderr[-4000:]

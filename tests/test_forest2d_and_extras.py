@@ -90,6 +90,68 @@ def test_forest2d_distribution_preserved_chi2():
     assert chi2 < 650, chi2
 
 
+@settings
+@hypothesis.given(
+    seed=st.integers(0, 2**31 - 1),
+    R=st.integers(1, 10),
+    W=st.integers(2, 40),
+    m=st.integers(1, 48),
+)
+def test_forest2d_structural_invariants(seed, R, W, m):
+    """validate_forest-style invariants for the flat 2-D build: every guide
+    entry resolves within its row, and in-order traversal of every (row,
+    cell) tree enumerates the cell's leaves ascending behind the row-clamped
+    left-overlap leaf."""
+    from repro.core.forest2d import validate_forest_rows
+
+    rng = np.random.default_rng(seed)
+    img = rng.random((R, W)) ** 4 + 1e-9
+    cdfs = np.stack([np_build_cdf(normalize_weights(r)) for r in img])
+    f = build_forest_rows(jnp.asarray(cdfs), m=m)
+    validate_forest_rows(f)
+
+
+@settings
+@hypothesis.given(
+    seed=st.integers(0, 2**31 - 1),
+    R=st.integers(2, 10),
+    W=st.integers(2, 32),
+)
+def test_forest2d_marginal_conditional_consistency(seed, R, W):
+    """2-D sampling factorizes (paper Sec. 5): draw the row from the marginal
+    (row-mass) forest, the column from the conditional row forest. Exact
+    per-draw properties: each stage satisfies its inversion bounds, and for a
+    fixed row the conditional stage is a monotone map of xi (so the joint
+    warp preserves LDS stratification per row)."""
+    from repro.core import build_forest, sample_forest
+
+    rng = np.random.default_rng(seed)
+    img = rng.random((R, W)) ** 3 + 1e-9
+    row_mass = normalize_weights(img.sum(axis=1))
+    marg = build_forest(jnp.asarray(row_mass), 16)
+    cond_cdfs = np.stack([np_build_cdf(normalize_weights(r)) for r in img])
+    f2 = build_forest_rows(jnp.asarray(cond_cdfs), m=8)
+
+    B = 128
+    xi_r = rng.random(B).astype(np.float32)
+    xi_c = np.sort(rng.random(B).astype(np.float32))
+    rows = np.asarray(sample_forest(marg, jnp.asarray(xi_r)))
+    marg_cdf = np.asarray(marg.cdf)
+    assert np.all(marg_cdf[rows] <= xi_r) and np.all(xi_r < marg_cdf[rows + 1])
+
+    cols = np.asarray(
+        sample_forest_rows(f2, jnp.asarray(rows, jnp.int32), jnp.asarray(xi_c))
+    )
+    lo = cond_cdfs[rows, cols]
+    hi = cond_cdfs[rows, cols + 1]
+    assert np.all(lo <= xi_c) and np.all(xi_c < hi + 1e-7)
+
+    # monotone conditional warp within one fixed row
+    r0 = jnp.full((B,), int(rows[0]), jnp.int32)
+    cols_fixed = np.asarray(sample_forest_rows(f2, r0, jnp.asarray(xi_c)))
+    assert np.all(np.diff(cols_fixed) >= 0)
+
+
 def test_forest2d_depth_bound():
     """Paper Sec. 3: per-cell traversal depth is O(log overlap), not
     O(overlap). Per-row 1-D builds are bit-identical to the flat 2-D build

@@ -53,6 +53,84 @@ def test_forest_sample_kernel_matches_oracle(n, m, B, power):
     assert np.array_equal(g, o) or np.all(cdf[g] == cdf[o])
 
 
+@pytest.mark.parametrize(
+    "spec",
+    [
+        ("spike_at_zero", 150, None),      # 151 exact ties at 0.0
+        ("interior_ties", 0, 299),         # 299 exact ties at 0.6 (left spine)
+    ],
+)
+def test_forest_sample_kernel_degenerate_fallback(spec):
+    """Exact tied weights build zero-width chains hundreds of levels deep —
+    far past the kernel's ``depth=40`` trip count — and the build flags those
+    cells. The kernel + ref paths with the ``cell_first``/``fallback`` side
+    tables must agree *elementwise* with ``core.sample.sample_forest``
+    (pre-resolution makes that true by construction). The raw no-side-table
+    descent also agrees: equal split keys send every lane the same way at
+    every tied node, so a tied spine collapses to <= 2 effective branches and
+    the 40-trip cap is never hit by a real uniform (a finding this test
+    pins — deep *leaf* depth does not imply deep *traversal*)."""
+    from repro.core import sample_forest
+
+    _, hot, hot2 = spec
+    w = np.zeros(300, np.float32)
+    w[hot] = 1.2
+    if hot2 is not None:
+        w[hot2] = 0.8
+    f = build_forest(jnp.asarray(w), 16)
+    assert int(np.asarray(f.fallback).sum()) >= 1
+    xi = jnp.asarray(np.random.default_rng(1).random(2048), jnp.float32)
+    core = np.asarray(sample_forest(f, xi))
+    kern = np.asarray(
+        forest_sample(
+            f.cdf, f.table, f.left, f.right, xi, f.cell_first, f.fallback,
+            interpret=True,
+        )
+    )
+    refp = np.asarray(ops.forest_sample(f, xi, use_pallas=False))
+    raw = np.asarray(
+        forest_sample(f.cdf, f.table, f.left, f.right, xi, interpret=True)
+    )
+    assert np.array_equal(kern, core)
+    assert np.array_equal(refp, core)
+    assert np.array_equal(raw, core)
+    cdf = np.asarray(f.cdf)
+    xin = np.asarray(xi)
+    assert np.all(cdf[kern] <= xin) and np.all(xin < cdf[kern + 1])
+
+
+def test_forest_sample_kernel_deep_adversarial():
+    """Distinct-key dyadic chain ~24 levels deep in ONE cell — adversarially
+    close to the kernel's depth=40 cap but legitimately resolvable by pure
+    descent. The raw kernel must match no-fallback core descent, and the
+    side-table kernel must match fallback core (the build flags the cell:
+    depth >> log2(overlap))."""
+    from repro.core import depth_stats, sample_forest
+
+    k = 24
+    w = np.asarray([2.0 ** -(i + 1) for i in range(k)] + [2.0 ** -k], np.float32)
+    f = build_forest(jnp.asarray(w), 1)
+    assert depth_stats(f)["max_depth"] >= k
+    xi = jnp.asarray(np.random.default_rng(0).random(4096), jnp.float32)
+    core_fb = np.asarray(sample_forest(f, xi))
+    core_raw = np.asarray(sample_forest(f, xi, use_fallback=False))
+    kern_fb = np.asarray(
+        forest_sample(
+            f.cdf, f.table, f.left, f.right, xi, f.cell_first, f.fallback,
+            interpret=True,
+        )
+    )
+    kern_raw = np.asarray(
+        forest_sample(f.cdf, f.table, f.left, f.right, xi, interpret=True)
+    )
+    assert np.array_equal(kern_fb, core_fb)
+    assert np.array_equal(kern_raw, core_raw)
+    assert np.array_equal(core_fb, core_raw)  # no zero-width ties here
+    cdf = np.asarray(f.cdf)
+    xin = np.asarray(xi)
+    assert np.all(cdf[kern_fb] <= xin) and np.all(xin < cdf[kern_fb + 1])
+
+
 @pytest.mark.parametrize("n,m", [(2, 1), (100, 7), (1023, 64), (8192, 4096)])
 def test_forest_delta_matches_ref(n, m):
     rng = np.random.default_rng(n)
