@@ -59,11 +59,14 @@ def run(sizes=(1 << 12, 1 << 16, 1 << 20)):
 
 
 def run_sharded(sizes=(1 << 12, 1 << 16)):
-    """Cell-partitioned sharded build (repro.dist.forest) across fake-device
-    counts. On one CPU core the fake devices time-slice, so absolute us
-    numbers mostly show the collective overhead; the row structure and the
-    device-count sweep are what CI's bench-regression gate pins. Set
-    XLA_FLAGS=--xla_force_host_platform_device_count=8 for the full sweep."""
+    """Cell-partitioned *windowed* sharded build (repro.dist.forest) across
+    fake-device counts. On one CPU core the fake devices time-slice, so
+    absolute us numbers mostly show the collective overhead; the row
+    structure, the device-count sweep, and the windowed per-device work
+    columns (``window`` = static local leaf-window size, ``capacity_util`` =
+    mean owned leaves / window) are what CI's bench-regression gate pins.
+    Set XLA_FLAGS=--xla_force_host_platform_device_count=8 for the full
+    sweep."""
     from jax.sharding import Mesh
 
     from repro.dist import forest as DF
@@ -76,14 +79,69 @@ def run_sharded(sizes=(1 << 12, 1 << 16)):
         w = jnp.asarray(normalize_weights(rng.random(n) ** 8 + 1e-12))
         for D in counts:
             mesh = Mesh(np.asarray(devices[:D]), ("data",))
+            f = None
 
             def build():
+                nonlocal f
                 f = DF.build_forest_sharded(w, n, mesh=mesh)
                 jax.block_until_ready(f.left)
 
             t = _time(build, reps=3)
             rows.append(
-                {"n": n, "devices": D, "us": t * 1e6, "meps": n / t / 1e6}
+                {
+                    "n": n, "devices": D, "us": t * 1e6, "meps": n / t / 1e6,
+                    "window": f.capacity,
+                    "util": float(np.asarray(f.window_count).mean())
+                    / f.capacity,
+                }
+            )
+    return rows
+
+
+def run_delta(sizes=(1 << 12,)):
+    """Delta updates vs from-scratch sharded rebuilds (update_forest_sharded
+    at the ambient device count): a no-op delta, a sparse perturbation, and
+    an all-cells-changed reweight. Integer-valued weights keep the scan
+    exact so the sparse case really does leave most shards' windows clean."""
+    from repro.dist import forest as DF
+
+    rows = []
+    rng = np.random.default_rng(0)
+    D = len(jax.devices())
+    for n in sizes:
+        w0 = rng.integers(2, 50, n).astype(np.float32)
+        sf0 = DF.build_forest_sharded(jnp.asarray(w0), n)
+        part = np.asarray(sf0.cell_bounds)
+
+        def full_rebuild(w):
+            f = DF.build_forest_sharded(jnp.asarray(w), n, partition=part)
+            jax.block_until_ready(f.left)
+
+        w_sparse = w0.copy()
+        w_sparse[n // 2] += 1.0
+        w_sparse[n // 2 + 1] -= 1.0
+        w_full = rng.random(n).astype(np.float32) + np.float32(1e-3)
+        for kind, w_new in (
+            ("noop", w0), ("sparse", w_sparse), ("full", w_full)
+        ):
+            stats = None
+
+            def update():
+                nonlocal stats
+                f, stats = DF.update_forest_sharded(
+                    sf0, jnp.asarray(w_new), with_stats=True
+                )
+                jax.block_until_ready(f.left)
+
+            t_upd = _time(update, reps=3)
+            t_full = _time(lambda: full_rebuild(w_new), reps=3)
+            rows.append(
+                {
+                    "n": n, "devices": D, "kind": kind,
+                    "update_us": t_upd * 1e6, "full_us": t_full * 1e6,
+                    "dirty_shards": stats["dirty_shards"],
+                    "dirty_chunks": stats["dirty_chunks"],
+                }
             )
     return rows
 
@@ -99,8 +157,16 @@ def main() -> list[str]:
     ]
     lines += [
         f"construction_sharded,n={r['n']},devices={r['devices']},"
-        f"forest_us={r['us']:.0f},forest_Mentries_s={r['meps']:.2f}"
+        f"forest_us={r['us']:.0f},forest_Mentries_s={r['meps']:.2f},"
+        f"window={r['window']},capacity_util={r['util']:.2f}"
         for r in run_sharded()
+    ]
+    lines += [
+        f"construction_delta,n={r['n']},devices={r['devices']},"
+        f"kind={r['kind']},update_us={r['update_us']:.0f},"
+        f"full_rebuild_us={r['full_us']:.0f},"
+        f"dirty_shards={r['dirty_shards']},dirty_chunks={r['dirty_chunks']}"
+        for r in run_delta()
     ]
     return lines
 

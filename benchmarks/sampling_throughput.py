@@ -57,9 +57,11 @@ def run(n: int = 1 << 16, m: int | None = None, batch: int = 1 << 16):
 
 
 def run_sharded(n: int = 1 << 16, batch: int = 1 << 16):
-    """Owner-routed sampling over the cell-partitioned forest across fake-
-    device counts (repro.dist.forest.sample_sharded). Full sweep needs
-    XLA_FLAGS=--xla_force_host_platform_device_count=8."""
+    """Owner-routed sampling over the cell-partitioned *windowed* forest
+    across fake-device counts (repro.dist.forest.sample_sharded). Each row
+    reports the static per-device leaf window the descent runs over —
+    the per-device working set, which shrinks with the shard count. Full
+    sweep needs XLA_FLAGS=--xla_force_host_platform_device_count=8."""
     from jax.sharding import Mesh
 
     from repro.dist import forest as DF
@@ -73,15 +75,26 @@ def run_sharded(n: int = 1 << 16, batch: int = 1 << 16):
         mesh = Mesh(np.asarray(devices[:D]), ("data",))
         sf = DF.build_forest_sharded(jnp.asarray(w), n, mesh=mesh)
         us = _time(lambda: DF.sample_sharded(sf, xi, mesh=mesh), reps=5)
-        rows.append((f"forest_sharded_d{D}", us, batch / us))
+        rows.append(
+            {
+                "name": f"forest_sharded_d{D}", "us": us, "mps": batch / us,
+                "window": sf.capacity,
+            }
+        )
     return rows
 
 
 def main() -> list[str]:
-    return [
+    lines = [
         f"throughput,{name},us_per_call={us:.0f},Msamples_s={mps:.2f}"
-        for name, us, mps in run() + run_sharded()
+        for name, us, mps in run()
     ]
+    lines += [
+        f"throughput,{r['name']},us_per_call={r['us']:.0f},"
+        f"Msamples_s={r['mps']:.2f},window={r['window']}"
+        for r in run_sharded()
+    ]
+    return lines
 
 
 if __name__ == "__main__":

@@ -1,5 +1,7 @@
-"""Sharded forest demo: cell-partitioned build + owner-routed sampling over
-8 fake CPU devices, bit-identical to the single-device path.
+"""Sharded forest demo: cell-partitioned *windowed* build + owner-routed
+sampling over 8 fake CPU devices, bit-identical to the single-device path —
+plus occupancy rebalancing for a spiky distribution and an in-place delta
+update that rebuilds only the dirty shards.
 
   PYTHONPATH=src python examples/sharded_forest.py
 
@@ -39,6 +41,9 @@ a, b = forest_to_numpy(f1), forest_to_numpy(gathered)
 for key in ("cdf", "table", "left", "right", "cell_first", "fallback"):
     assert np.array_equal(a[key], b[key]), key
 print("build: sharded gather is BIT-IDENTICAL to single-device build_forest")
+print(f"windowed: each of the {D} shards built a {sharded.capacity}-leaf "
+      f"window of the {n}-leaf world "
+      f"(owned leaves per shard: {np.asarray(sharded.window_count).tolist()})")
 
 # --- sample: owner-routed descent vs Algorithm 2 ----------------------------
 xi = jnp.asarray(np.random.default_rng(0).random(1 << 16), jnp.float32)
@@ -51,6 +56,49 @@ counts = np.bincount(ids_sharded, minlength=n)
 expected = weights * len(np.asarray(xi))
 chi2 = float(np.sum((counts - expected) ** 2 / np.maximum(expected, 1e-9)))
 print(f"chi-square vs target weights: {chi2:.0f} (dof {n - 1})")
+
+# --- occupancy rebalancing --------------------------------------------------
+# The i^20 distribution piles nearly all its probability mass — and hence
+# nearly all its CDF intervals — into the last guide cells. An equal-width
+# cell partition puts almost every leaf on the last shard; occupancy
+# rebalancing keeps the partition contiguous and cell-aligned but sizes the
+# cell ranges by leaf count, shrinking the static window capacity every
+# shard must budget for.
+rebalanced = DF.build_forest_sharded(jnp.asarray(weights), m, rebalance=True)
+rb = DF.gather_forest(rebalanced)
+b = forest_to_numpy(rb)
+for key in ("cdf", "table", "left", "right", "cell_first", "fallback"):
+    assert np.array_equal(a[key], b[key]), key
+rbounds = np.asarray(rebalanced.cell_bounds)
+print(f"rebalance: window capacity {sharded.capacity} -> "
+      f"{rebalanced.capacity}, cell ranges "
+      + ", ".join(f"[{rbounds[i]},{rbounds[i+1]})" for i in range(D))
+      + " — still bit-identical")
+
+# --- delta update -----------------------------------------------------------
+# Re-target a handful of weights in place: the CDF is patched through the
+# fixed SCAN_CHUNKS grid, the changed-bits mask comes from the
+# kernels/forest_delta pass, and only shards whose leaf windows actually
+# moved rebuild their (window-sized) trees. Integer-valued weights keep the
+# scan exact, so the sparse perturbation really leaves most shards clean.
+iw = np.random.default_rng(1).integers(2, 50, n).astype(np.float32)
+base = DF.build_forest_sharded(jnp.asarray(iw), m)
+iw2 = iw.copy()
+iw2[n // 2] += 1.0
+iw2[n // 2 + 1] -= 1.0   # total preserved -> one CDF entry moves
+updated, stats = DF.update_forest_sharded(
+    base, jnp.asarray(iw2), with_stats=True)
+scratch = DF.build_forest_sharded(
+    jnp.asarray(iw2), m, partition=np.asarray(base.cell_bounds))
+for key in updated._fields:
+    assert np.array_equal(np.asarray(getattr(updated, key)),
+                          np.asarray(getattr(scratch, key))), key
+print(f"delta update: {stats['dirty_shards']}/{D} shards rebuilt "
+      f"({stats['dirty_chunks']}/8 scan chunks dirty) — ShardedForest "
+      f"bit-identical to a from-scratch rebuild")
+noop, nstats = DF.update_forest_sharded(base, jnp.asarray(iw), with_stats=True)
+assert not nstats["rebuilt"]
+print("delta update: no-op delta skips the tree rebuild entirely")
 
 # --- device-count sweep -----------------------------------------------------
 print("build/sample timing sweep (fake devices share one core; the row "

@@ -39,6 +39,22 @@ def normalize_weights(w: np.ndarray) -> np.ndarray:
     return (w / s).astype(np.float32)
 
 
+def updated_weights(raw, weights=None, delta=None):
+    """New raw float64 weights + their normalized float32 form.
+
+    The shared bookkeeping of in-place distribution updates
+    (``ForestSampler.update_weights`` / ``MixtureSampler.update_weights``):
+    pass new full ``weights``, or a ``delta`` added to the current ``raw``.
+    """
+    if (weights is None) == (delta is None):
+        raise ValueError("pass exactly one of weights or delta")
+    if weights is None:
+        raw = np.asarray(raw, np.float64) + np.asarray(delta, np.float64)
+    else:
+        raw = np.asarray(weights, np.float64)
+    return raw, normalize_weights(raw)
+
+
 def scan_chunk_rows(w: jax.Array) -> jax.Array:
     """(n,) -> (SCAN_CHUNKS, L) zero-padded chunk rows — THE scan grid.
 
@@ -48,6 +64,18 @@ def scan_chunk_rows(w: jax.Array) -> jax.Array:
     n = w.shape[0]
     L = -(-n // SCAN_CHUNKS)
     return jnp.pad(w, (0, SCAN_CHUNKS * L - n)).reshape(SCAN_CHUNKS, L)
+
+
+def chunk_bounds(n: int) -> np.ndarray:
+    """Element spans of the fixed scan-grid rows: row r covers [b[r], b[r+1]).
+
+    The delta-update path (:func:`repro.dist.forest.update_forest_sharded`)
+    patches the CDF through this exact grid — a weight change in row ``r``
+    re-scans row ``r`` and re-derives the serial carry chain, never a
+    different reassociation — so it uses these bounds to report which chunk
+    rows a perturbation actually touched."""
+    L = -(-n // SCAN_CHUNKS)
+    return np.minimum(np.arange(SCAN_CHUNKS + 1, dtype=np.int64) * L, n)
 
 
 def chunked_cumsum(w: jax.Array, row_scan=None) -> jax.Array:

@@ -145,20 +145,28 @@ def _build_cell_trees(
     m: int,
     cell_lo,
     m_local: int,
+    m_owned=None,
     node_offset=0,
     n_total: int | None = None,
     fallback_slack: int = 2,
 ):
-    """Per-cell radix trees for the guide-cell range [cell_lo, cell_lo+m_local).
+    """Per-cell radix trees for the guide-cell range [cell_lo, cell_lo+m_owned).
 
     The shared build core of the single-device path (``cell_lo=0,
     m_local=m``) and the cell-partitioned sharded path
     (:mod:`repro.dist.forest`). ``data``/``cells``/``d`` are a contiguous
     window of the global leaf arrays; window index ``w`` is global leaf
     ``w + node_offset``, and all *stored references* (node ids, leaf refs,
-    ``table``/``cell_first`` entries) are global. ``cell_lo`` may be traced
-    (it is ``axis_index * m_local`` under ``shard_map``); ``m_local`` is
-    static.
+    ``table``/``cell_first`` entries) are global. ``cell_lo`` and
+    ``node_offset`` may be traced (they come from per-shard plan arrays
+    indexed by ``axis_index`` under ``shard_map``); ``m_local`` is static.
+
+    ``m_owned`` (traced, default ``m_local``) is the number of *owned* cells
+    at the front of the ``m_local``-sized cell window. Shard plans with
+    unequal cell ranges pad every range to a static capacity ``m_local``;
+    the ``[m_owned, m_local)`` slack carries no ownership, so its per-cell
+    outputs (``table``/``cell_first``/``fallback`` rows) are garbage the
+    caller must mask out.
 
     Every edge of a cell's tree stays inside that cell (crossing separators
     carry the sentinel distance), so a node slot is written only by the cell
@@ -176,11 +184,12 @@ def _build_cell_trees(
     sentinel = jnp.uint32(DIST_SENTINEL)
     cell_lo = jnp.int32(cell_lo)
     node_offset = jnp.int32(node_offset)
+    m_owned = jnp.int32(m_local if m_owned is None else m_owned)
 
     # Ownership; out-of-range scatter indices route to m_local and drop
     # (negative indices would wrap, so they must be rewritten, not dropped).
     loc = cells - cell_lo
-    owned_leaf = (loc >= 0) & (loc < m_local)
+    owned_leaf = (loc >= 0) & (loc < m_owned)
     loc_safe = jnp.where(owned_leaf, loc, m_local)
 
     grid = (cell_lo + jnp.arange(m_local, dtype=jnp.int32)).astype(

@@ -14,14 +14,15 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core import build_forest, sample_forest
-from repro.core.cdf import normalize_weights
+from repro.core.cdf import normalize_weights, updated_weights
 from repro.core.lds import radical_inverse_base2
 
 
 class MixtureSampler:
     def __init__(self, weights, m: int | None = None, seed: int = 0,
-                 sharded: bool = False, mesh=None):
-        w = normalize_weights(np.asarray(weights, np.float64))
+                 sharded: bool = False, mesh=None, rebalance: bool = False):
+        self._raw = np.asarray(weights, np.float64)
+        w = normalize_weights(self._raw)
         self.weights = w
         m = m or max(len(w), 16)
         self.sharded = sharded
@@ -31,7 +32,7 @@ class MixtureSampler:
             from repro.dist import forest as DF
 
             self.forest, self.mesh = DF.build_forest_sharded_auto(
-                jnp.asarray(w), m, mesh=mesh
+                jnp.asarray(w), m, mesh=mesh, rebalance=rebalance
             )
         else:
             self.mesh = None
@@ -39,6 +40,22 @@ class MixtureSampler:
         # Cranley-Patterson rotation so different runs decorrelate while
         # keeping the sequence's low discrepancy.
         self.offset = np.float32(np.random.default_rng(seed).random())
+
+    def update_weights(self, weights=None, *, delta=None) -> None:
+        """Re-target the mixture in place (curriculum shifts, corpus swaps):
+        new full weights, or a delta added to the current raw weights. The
+        sharded path rebuilds only the shards whose leaf windows changed;
+        ``sample`` stays deterministic in (step, n) against the new target."""
+        self._raw, self.weights = updated_weights(self._raw, weights,
+                                                  delta=delta)
+        if self.sharded:
+            from repro.dist import forest as DF
+
+            self.forest = DF.update_forest_sharded(
+                self.forest, jnp.asarray(self.weights), mesh=self.mesh
+            )
+        else:
+            self.forest = build_forest(jnp.asarray(self.weights), self.forest.m)
 
     def sample(self, step: int, n: int, qmc: bool = True) -> np.ndarray:
         """Corpus index for each of n sequences of global batch ``step``.

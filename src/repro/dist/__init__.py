@@ -14,6 +14,8 @@ Submodules (imported lazily by callers; this package import stays light so
 * :mod:`repro.dist.compression` — int8 quantization, error-feedback gradient
   compression, and compressed cross-pod all-reduce.
 * :mod:`repro.dist.forest`      — cell-partitioned sharded radix-tree forest
-  construction + owner-routed sampling (bit-identical to the single-device
-  build; the module docstring states the cell-aligned partitioning contract).
+  construction over capacity-bounded per-shard leaf windows (equal,
+  occupancy-rebalanced, or explicit cell partitions), owner-routed sampling,
+  and windowed delta updates — all bit-identical to the single-device build
+  (the module docstring states the partitioning and windowing contracts).
 """

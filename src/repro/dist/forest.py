@@ -7,18 +7,31 @@ boundary — this module partitions the ``m`` guide cells *contiguously* over
 the mesh data axis, and because shard boundaries are aligned to cell
 boundaries, **no cross-device tree edges exist by construction**.
 
-Partitioning contract (load-bearing; tests pin it):
+Windowed shard-local builds (the scaling contract; tests pin it):
 
-* ``m`` must be divisible by the shard count ``D``. Shard ``d`` owns the
-  cell range ``[d*m/D, (d+1)*m/D)`` — i.e. the value range
-  ``[d/D, (d+1)/D)`` of the unit interval.
-* A node slot (= leaf index) is owned by the shard owning its leaf's cell.
-  Ownership of slots is a disjoint partition, so per-shard partial
-  ``left``/``right`` arrays (unowned slots ``INVALID`` = int32 min) combine
-  exactly by elementwise max — :func:`gather_forest`.
+* Leaves are sorted by value, and cells are contiguous in leaf space, so a
+  contiguous cell range owns a **contiguous leaf range**. Each shard's build
+  runs over only that range, padded to a static ``capacity`` (shapes must be
+  static under ``shard_map``): per-device tree work is the O(C log C)
+  nearest-greater descent over its C-sized window, **not** O(n log n) over
+  the world — the per-device window provably shrinks with the shard count
+  (``tests/test_dist_forest.py`` asserts this on window sizes, not clocks).
+* The plan (cell bounds -> leaf windows -> capacity) is derived on host from
+  the *device-computed* CDF, so window boundaries agree bit-for-bit with
+  what every shard computes under ``shard_map``. A window may include a few
+  unowned neighbor leaves (capacity padding / clamping); ownership masking
+  in ``core.forest._build_cell_trees`` keeps their slots ``INVALID``.
+* The cell partition may be **unequal** (``occupancy_partition``): contiguous
+  and cell-aligned, but balanced by *leaf occupancy* so spiky distributions
+  no longer pile onto one shard. Equal-width ``cell_partition`` stays the
+  default (requires ``D | m``); ``rebalance=True`` opts into occupancy
+  balancing; ``partition=`` pins explicit bounds.
 * All stored references are *global*: child refs, leaf refs (``~i``), guide
-  table entries, and ``cell_first`` use global leaf indices, so gathered or
-  routed results need no re-indexing.
+  table entries, and ``cell_first`` use global leaf indices. A node slot is
+  owned by the shard owning its leaf's cell; slot ownership is a disjoint
+  partition, so scatter-maxing the per-shard windows (unowned slots
+  ``INVALID`` = int32 min) reconstructs the exact single-device arrays —
+  :func:`gather_forest` is **bit-identical** to ``repro.core.build_forest``.
 * The CDF is produced by a **distributed scan** over the fixed
   ``core.cdf.SCAN_CHUNKS`` reassociation grid: each device scans its chunk
   rows locally (optionally through the ``kernels.cdf_scan`` Pallas kernel in
@@ -27,22 +40,22 @@ Partitioning contract (load-bearing; tests pin it):
   every device re-derives the serial carry chain identically. The carry is
   deliberately *not* a ``psum`` of totals: a tree reduction has
   order-dependent rounding, and tree topology depends on CDF *bit patterns*.
-  Result: :func:`build_forest_sharded` is **bit-identical** to the
-  single-device :func:`repro.core.build_forest` for every shard count
-  dividing ``SCAN_CHUNKS`` (the differential conformance suite in
-  ``tests/test_dist_forest.py`` gates this).
-* Sampling routes each uniform to its owning shard arithmetically
-  (``cell id // (m/D)`` — no search), the owner runs the local Algorithm-2
-  descent touching only slots it owns, and results are combined with a
-  masked ``psum`` (each lane has exactly one owner, so the sum is exact).
+* Sampling routes each uniform to its owning shard (cell id against the
+  replicated partition bounds), the owner runs the local Algorithm-2 descent
+  over its window (global node id minus window start), and results combine
+  with a masked ``psum`` (each lane has exactly one owner, so the sum is
+  exact) — elementwise identical to ``core.sample.sample_forest``.
 
-Known tradeoff, by design (see ROADMAP open items): the nearest-greater
-sweep over separator distances is executed per device over the full index
-window with writes masked to the owned cell range. That keeps every shape
-static under ``shard_map`` (leaf counts per cell range are data-dependent);
-compacting each shard to a capacity-bounded local window (via the
-``node_offset`` parameter of ``core.forest._build_cell_trees``) is the
-follow-on, as is rebalancing shards under uneven cell occupancy.
+Delta updates (:func:`update_forest_sharded`): a weight update patches the
+CDF through the same fixed ``SCAN_CHUNKS`` grid (identical reassociation, so
+the result is bit-identical to a from-scratch scan), recomputes the
+Algorithm-1 per-element work through :mod:`repro.kernels.forest_delta`
+(new separator distances + changed-leaf-bits mask), and rebuilds only
+window-sized problems — shards whose leaf windows carry no changed bits
+keep their partial arrays byte-for-byte, and a no-op delta returns without
+touching the trees at all. The result is bit-identical to a from-scratch
+sharded rebuild over the same partition (the delta differential tests gate
+this).
 """
 from __future__ import annotations
 
@@ -55,35 +68,55 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core.cdf import SCAN_CHUNKS, finalize_cdf, lower_bounds, scan_chunk_rows
+from repro.core.cdf import (
+    SCAN_CHUNKS,
+    chunk_bounds,
+    finalize_cdf,
+    lower_bounds,
+    scan_chunk_rows,
+)
 from repro.core.forest import (
+    INVALID,
     RadixForest,
     _build_cell_trees,
     _cells,
-    _separator_distances,
 )
 from repro.core.sample import MAX_DEPTH, _bisect
+from repro.kernels import ops
+
+# Window capacities are rounded up to this granule: coarse enough that small
+# occupancy drift between delta updates reuses the compiled program, fine
+# enough that the per-device window still shrinks ~linearly with the shard
+# count (a pow2 round would flatten 5/8ths of the sweep).
+_CAPACITY_GRANULE = 64
 
 
 class ShardedForest(NamedTuple):
     """Guide table + forest, cell-partitioned over ``n_shards`` devices.
 
-    ``table``/``fallback`` are (m,) arrays laid out as the concatenation of
-    the per-shard cell slices (shardable along the data axis); ``left`` /
-    ``right`` are (D, n) with row ``d`` holding shard ``d``'s partial node
-    arrays (unowned slots ``INVALID``); ``cdf``/``cell_first`` are replicated
-    (the cutpoint side tables are needed at shard boundaries)."""
+    ``left``/``right`` are (D, C) *windowed* partial node arrays: row ``d``
+    holds the contiguous global slot range ``[window_start[d],
+    window_start[d] + C)`` with unowned slots ``INVALID``; stored references
+    are global. ``table``/``fallback``/``cell_first``/``cdf`` are replicated
+    (combined across shards with exact disjoint-support psums at build
+    time). ``cell_bounds`` is the contiguous cell partition (shard ``d``
+    owns cells ``[cell_bounds[d], cell_bounds[d+1])``); ``window_count`` is
+    the number of owned leaves per shard (``window_start`` may be clamped
+    below the first owned leaf so the static window fits in ``[0, n)``)."""
 
-    cdf: jax.Array         # (n+1,) f32, replicated
-    table: jax.Array       # (m,)  i32, cell-sharded
-    left: jax.Array        # (D, n) i32 partial child refs
-    right: jax.Array       # (D, n) i32 partial child refs
-    cell_first: jax.Array  # (m+1,) i32, replicated
-    fallback: jax.Array    # (m,)  bool, cell-sharded
+    cdf: jax.Array           # (n+1,) f32, replicated
+    table: jax.Array         # (m,)  i32, replicated
+    left: jax.Array          # (D, C) i32 windowed partial child refs
+    right: jax.Array         # (D, C) i32 windowed partial child refs
+    cell_first: jax.Array    # (m+1,) i32, replicated
+    fallback: jax.Array      # (m,)  bool, replicated
+    cell_bounds: jax.Array   # (D+1,) i32 cell partition bounds
+    window_start: jax.Array  # (D,)  i32 global leaf offset of each window
+    window_count: jax.Array  # (D,)  i32 owned leaves per shard
 
     @property
     def n(self) -> int:
-        return self.left.shape[1]
+        return self.cdf.shape[0] - 1
 
     @property
     def m(self) -> int:
@@ -93,6 +126,11 @@ class ShardedForest(NamedTuple):
     def n_shards(self) -> int:
         return self.left.shape[0]
 
+    @property
+    def capacity(self) -> int:
+        """Static per-shard leaf-window size (the local build problem)."""
+        return self.left.shape[1]
+
 
 def default_mesh(axis: str = "data") -> Mesh:
     """1-D mesh over every local device (8 fake CPU devices in tests)."""
@@ -100,10 +138,77 @@ def default_mesh(axis: str = "data") -> Mesh:
 
 
 def cell_partition(m: int, n_shards: int) -> np.ndarray:
-    """Shard boundaries in cell space: shard d owns [b[d], b[d+1])."""
+    """Equal-width shard bounds in cell space: shard d owns [b[d], b[d+1])."""
     if m % n_shards:
         raise ValueError(f"m={m} must divide over {n_shards} shards")
     return np.arange(n_shards + 1, dtype=np.int64) * (m // n_shards)
+
+
+def occupancy_partition(cell_counts, n_shards: int) -> np.ndarray:
+    """Contiguous cell-aligned bounds minimizing the max per-shard leaf load.
+
+    Classic painter's partition: binary-search the smallest capacity for
+    which a greedy left-to-right fill needs at most ``n_shards`` segments,
+    then emit the greedy cuts at that capacity. Deterministic in the input;
+    trailing shards may own empty cell ranges. No absolute per-shard load
+    bound is promised — one giant cell forces its whole load onto a single
+    shard (cell alignment is the contract) — but the returned partition
+    minimizes the max per-shard load over all contiguous cell-aligned
+    partitions, which the property tests verify by brute force.
+    """
+    counts = np.asarray(cell_counts, np.int64)
+    if counts.ndim != 1 or counts.size == 0:
+        raise ValueError("cell_counts must be a non-empty 1-D array")
+    if n_shards < 1:
+        raise ValueError("n_shards must be >= 1")
+    m = counts.shape[0]
+    cum = np.concatenate([[0], np.cumsum(counts)])
+    total = int(cum[-1])
+
+    def cuts(cap: int) -> list[int]:
+        """Greedy segment ends: each shard takes the longest prefix <= cap."""
+        out, b = [], 0
+        for _ in range(n_shards):
+            if b < m:
+                b = int(np.searchsorted(cum, cum[b] + cap, side="right")) - 1
+            out.append(b)
+        return out
+
+    lo = max(int(counts.max(initial=0)), -(-total // n_shards), 1)
+    hi = max(total, lo)
+    while lo < hi:
+        mid = (lo + hi) // 2
+        if cuts(mid)[-1] >= m:
+            hi = mid
+        else:
+            lo = mid + 1
+    return np.asarray([0] + cuts(lo), np.int64)
+
+
+def resolve_partition(
+    m: int,
+    n_shards: int,
+    partition=None,
+    rebalance: bool = False,
+    cell_counts=None,
+) -> np.ndarray:
+    """Cell bounds for a build: explicit > occupancy-balanced > equal-width."""
+    if partition is not None:
+        b = np.asarray(partition, np.int64)
+        if (
+            b.shape != (n_shards + 1,)
+            or b[0] != 0
+            or b[-1] != m
+            or np.any(np.diff(b) < 0)
+        ):
+            raise ValueError(
+                f"partition must be a nondecreasing (n_shards+1,) bounds "
+                f"array from 0 to m={m}, got {b!r}"
+            )
+        return b
+    if rebalance:
+        return occupancy_partition(cell_counts, n_shards)
+    return cell_partition(m, n_shards)
 
 
 def pallas_row_scan(rows: jax.Array) -> jax.Array:
@@ -184,6 +289,157 @@ def build_cdf_sharded(
     return _cdf_builder(mesh, axis, int(w.shape[0]), row_scan)(scan_chunk_rows(w))
 
 
+@functools.partial(jax.jit, static_argnames=("m",))
+def _device_cells(cdf: jax.Array, m: int) -> jax.Array:
+    """Guide cell of every leaf, with the device's own float ops (the plan
+    must agree bit-for-bit with what shard_fn computes)."""
+    return _cells(lower_bounds(cdf), m)
+
+
+def _use_pallas() -> bool:
+    # The forest_delta kernel compiles natively on TPU; in interpret mode the
+    # pure-jnp reference is the same bits for a fraction of the dispatch cost.
+    return jax.default_backend() == "tpu"
+
+
+def _round_capacity(max_count: int, n: int) -> int:
+    c = -(-max(int(max_count), 1) // _CAPACITY_GRANULE) * _CAPACITY_GRANULE
+    return min(c, n)
+
+
+def _plan_windows(cells_np: np.ndarray, bounds: np.ndarray, n: int):
+    """Per-shard leaf windows for a cell partition.
+
+    Returns ``(starts, counts, capacity)``: true first-owned-leaf indices,
+    owned leaf counts, and the static window capacity. ``cells_np`` is
+    nondecreasing (leaves sorted by value), so each shard's owned leaves are
+    the contiguous range ``[starts[d], starts[d] + counts[d])``."""
+    starts = np.searchsorted(cells_np, bounds[:-1], side="left").astype(np.int64)
+    ends = np.searchsorted(cells_np, bounds[1:], side="left").astype(np.int64)
+    counts = ends - starts
+    return starts, counts, _round_capacity(counts.max(initial=1), n)
+
+
+@functools.lru_cache(maxsize=128)
+def _windowed_builder(
+    mesh: Mesh, axis: str, m: int, n: int, cap: int, m_cap: int,
+    fallback_slack: int,
+):
+    """Cached jitted windowed-build program.
+
+    Inputs (all replicated): the cdf, the global separator distances, the
+    cell partition bounds, and the clamped window starts. Each device slices
+    its own ``cap``-sized leaf window and builds only the trees of its owned
+    cell range; per-cell outputs combine into replicated global tables via
+    exact disjoint-support psums."""
+
+    def shard_fn(cdf, d_full, bounds, starts):
+        idx = jax.lax.axis_index(axis)
+        data = lower_bounds(cdf)
+        start = starts[idx]
+        cell_lo, cell_hi = bounds[idx], bounds[idx + 1]
+        wdata = jax.lax.dynamic_slice(data, (start,), (cap,))
+        wcells = _cells(wdata, m)
+        if cap > 1:
+            wd = jax.lax.dynamic_slice(d_full, (start,), (cap - 1,))
+        else:
+            wd = jnp.zeros((0,), jnp.uint32)
+        left, right, tbl, cf, fb = _build_cell_trees(
+            wdata, wd, wcells, m=m, cell_lo=cell_lo, m_local=m_cap,
+            m_owned=cell_hi - cell_lo, node_offset=start, n_total=n,
+            fallback_slack=fallback_slack,
+        )
+        # Combine owned per-cell rows into replicated (m,) tables: targets
+        # are disjoint across shards and slack rows route to m (dropped), so
+        # the psum only ever adds zeros to the single contributor.
+        cids = cell_lo + jnp.arange(m_cap, dtype=jnp.int32)
+        owned_c = jnp.arange(m_cap, dtype=jnp.int32) < (cell_hi - cell_lo)
+        tgt = jnp.where(owned_c, cids, m)
+        table_g = jax.lax.psum(
+            jnp.zeros((m,), jnp.int32).at[tgt].set(tbl, mode="drop"), axis
+        )
+        cf_g = jax.lax.psum(
+            jnp.zeros((m,), jnp.int32).at[tgt].set(cf, mode="drop"), axis
+        )
+        fb_g = jax.lax.psum(
+            jnp.zeros((m,), jnp.int32).at[tgt].set(
+                fb.astype(jnp.int32), mode="drop"
+            ),
+            axis,
+        )
+        return table_g, left[None], right[None], cf_g, fb_g > 0
+
+    return jax.jit(shard_map(
+        shard_fn, mesh=mesh, in_specs=(P(), P(), P(), P()),
+        out_specs=(P(), P(axis), P(axis), P(), P()),
+        check_rep=False,
+    ))
+
+
+def _separator_distances_for(cdf: jax.Array, m: int) -> jax.Array:
+    """Global (n-1,) separator distances via the forest_delta kernel path
+    (the Algorithm-1 per-element work; bit-identical to
+    ``core.forest._separator_distances`` on the same lower bounds)."""
+    return ops.forest_delta(lower_bounds(cdf), m, use_pallas=_use_pallas())
+
+
+def build_forest_from_cdf_sharded(
+    cdf: jax.Array,
+    m: int,
+    mesh: Mesh | None = None,
+    axis: str = "data",
+    fallback_slack: int = 2,
+    partition=None,
+    rebalance: bool = False,
+    d_full: jax.Array | None = None,
+    cells_np: np.ndarray | None = None,
+) -> ShardedForest:
+    """Windowed shard-local forest build over a replicated CDF.
+
+    Host-side planning (cell occupancy -> partition -> leaf windows ->
+    static capacity) runs on the device-computed cell ids, then one
+    ``shard_map`` builds every shard's window. Gathering the result
+    (:func:`gather_forest`) is bit-identical to
+    ``core.build_forest_from_cdf(cdf, m)``. ``d_full``/``cells_np`` let the
+    delta-update path feed in the distances and cell ids it already
+    computed (they must match the device's own — bit-identity rests on it).
+    """
+    mesh = mesh if mesh is not None else default_mesh(axis)
+    D = _shard_count(mesh, axis)
+    cdf = jnp.asarray(cdf, jnp.float32)
+    n = int(cdf.shape[0]) - 1
+    if cells_np is None:
+        cells_np = np.asarray(_device_cells(cdf, m))
+    bounds = resolve_partition(
+        m, D, partition=partition, rebalance=rebalance,
+        cell_counts=(
+            np.bincount(cells_np, minlength=m)
+            if partition is None and rebalance else None
+        ),
+    )
+    starts, counts, cap = _plan_windows(cells_np, bounds, n)
+    w_starts = np.clip(starts, 0, n - cap)
+    m_cap = _round_capacity(np.diff(bounds).max(initial=1), m)
+    if d_full is None:
+        d_full = _separator_distances_for(cdf, m)
+    table, left, right, cf, fb = _windowed_builder(
+        mesh, axis, m, n, cap, m_cap, fallback_slack
+    )(
+        cdf,
+        d_full,
+        jnp.asarray(bounds, jnp.int32),
+        jnp.asarray(w_starts, jnp.int32),
+    )
+    return ShardedForest(
+        cdf, table, left, right,
+        jnp.concatenate([cf, jnp.asarray([n - 1], jnp.int32)]),
+        fb,
+        jnp.asarray(bounds, jnp.int32),
+        jnp.asarray(w_starts, jnp.int32),
+        jnp.asarray(counts, jnp.int32),
+    )
+
+
 def build_forest_sharded(
     weights: jax.Array,
     m: int,
@@ -191,51 +447,24 @@ def build_forest_sharded(
     axis: str = "data",
     fallback_slack: int = 2,
     row_scan=None,
+    partition=None,
+    rebalance: bool = False,
 ) -> ShardedForest:
-    """Distributed scan -> per-shard cell-range tree build, one shard_map.
+    """Distributed scan -> windowed per-shard cell-range tree build.
 
-    Each device derives the full CDF from the distributed scan, then builds
-    only the trees of its own cell range (writes masked by ownership), with
-    node ids in the global index space. Gathering the partials
-    (:func:`gather_forest`) is bit-identical to ``core.build_forest``."""
+    Each device derives the full CDF from the distributed chunked scan, then
+    builds only the trees of its own cell range over a capacity-bounded
+    local leaf window, with node ids in the global index space. Gathering
+    the partials (:func:`gather_forest`) is bit-identical to
+    ``core.build_forest``."""
     mesh = mesh if mesh is not None else default_mesh(axis)
-    D = _shard_count(mesh, axis)
-    if m % D:
-        raise ValueError(f"m={m} must divide over the {D}-way cell partition")
+    _shard_count(mesh, axis)
     w = jnp.asarray(weights, jnp.float32)
-    n = int(w.shape[0])
-    cdf, table, left, right, cf, fb = _forest_builder(
-        mesh, axis, m, n, fallback_slack, row_scan
-    )(scan_chunk_rows(w))
-    cell_first = jnp.concatenate([cf, jnp.asarray([n - 1], jnp.int32)])
-    return ShardedForest(cdf, table, left, right, cell_first, fb)
-
-
-@functools.lru_cache(maxsize=128)
-def _forest_builder(
-    mesh: Mesh, axis: str, m: int, n: int, fallback_slack: int, row_scan
-):
-    """Cached jitted sharded-build program (keyed by mesh/shape params)."""
-    m_local = m // int(mesh.shape[axis])
-
-    def shard_fn(w_rows):
-        raw = _distributed_raw_scan(w_rows, axis, n, row_scan)
-        cdf = finalize_cdf(raw)
-        data = lower_bounds(cdf)
-        cells = _cells(data, m)
-        d = _separator_distances(data, cells)
-        cell_lo = jax.lax.axis_index(axis) * m_local
-        left, right, table, cf, fb = _build_cell_trees(
-            data, d, cells, m=m, cell_lo=cell_lo, m_local=m_local,
-            fallback_slack=fallback_slack,
-        )
-        return cdf, table, left[None], right[None], cf, fb
-
-    return jax.jit(shard_map(
-        shard_fn, mesh=mesh, in_specs=P(axis),
-        out_specs=(P(), P(axis), P(axis), P(axis), P(axis), P(axis)),
-        check_rep=False,
-    ))
+    cdf = _cdf_builder(mesh, axis, int(w.shape[0]), row_scan)(scan_chunk_rows(w))
+    return build_forest_from_cdf_sharded(
+        cdf, m, mesh=mesh, axis=axis, fallback_slack=fallback_slack,
+        partition=partition, rebalance=rebalance,
+    )
 
 
 def build_forest_sharded_auto(
@@ -244,21 +473,134 @@ def build_forest_sharded_auto(
     mesh: Mesh | None = None,
     axis: str = "data",
     fallback_slack: int = 2,
+    rebalance: bool = False,
 ) -> tuple[ShardedForest, Mesh]:
     """Caller-friendly build: default mesh over all devices and ``m`` rounded
-    up to the next shard multiple (the cell-aligned partition needs D | m).
-    The shared glue for opt-in call sites (``serve.sampler.ForestSampler``,
-    ``data.mixture.MixtureSampler``); returns the forest and the mesh to
-    sample with."""
+    up to the next shard multiple (the equal cell-aligned partition needs
+    D | m; occupancy rebalancing has no such constraint but keeps the same
+    guide resolution). The shared glue for opt-in call sites
+    (``serve.sampler.ForestSampler``, ``data.mixture.MixtureSampler``);
+    returns the forest and the mesh to sample with."""
     mesh = mesh if mesh is not None else default_mesh(axis)
     D = int(mesh.shape[axis])
     m = -(-m // D) * D
     return (
         build_forest_sharded(
-            weights, m, mesh=mesh, axis=axis, fallback_slack=fallback_slack
+            weights, m, mesh=mesh, axis=axis, fallback_slack=fallback_slack,
+            rebalance=rebalance,
         ),
         mesh,
     )
+
+
+def update_forest_sharded(
+    forest: ShardedForest,
+    weights: jax.Array | None = None,
+    *,
+    weights_delta=None,
+    base_weights=None,
+    mesh: Mesh | None = None,
+    axis: str = "data",
+    fallback_slack: int = 2,
+    row_scan=None,
+    with_stats: bool = False,
+):
+    """Delta update: rebuild only the shards whose owned windows changed.
+
+    ``weights`` is the full new weight vector (or pass ``weights_delta`` +
+    ``base_weights`` and the float32 sum is formed here). The CDF is patched
+    through the fixed ``SCAN_CHUNKS`` reassociation grid (same row scans,
+    same serial carry — bit-identical to a from-scratch distributed scan);
+    the Algorithm-1 per-element re-work (new separator distances + the
+    changed-leaf-bits mask) comes from :mod:`repro.kernels.forest_delta`.
+    Shards whose leaf windows carry no changed bits keep their partial
+    arrays byte-for-byte; a no-op delta skips the tree rebuild entirely.
+    The result is **bit-identical** to
+    ``build_forest_sharded(weights, m, partition=forest.cell_bounds)``.
+
+    With ``with_stats=True`` also returns a dict: ``dirty_shards`` /
+    ``dirty_chunks`` (scan-grid rows re-spanned by changed CDF entries) /
+    ``plan_changed`` (leaf windows moved -> full windowed rebuild) /
+    ``rebuilt`` (the tree-build shard_map actually ran).
+    """
+    mesh = mesh if mesh is not None else default_mesh(axis)
+    D = _shard_count(mesh, axis)
+    if forest.n_shards != D:
+        raise ValueError(
+            f"forest has {forest.n_shards} shards but mesh axis has {D}"
+        )
+    if weights is None:
+        if weights_delta is None or base_weights is None:
+            raise ValueError(
+                "pass weights, or both weights_delta and base_weights"
+            )
+        weights = (
+            jnp.asarray(base_weights, jnp.float32)
+            + jnp.asarray(weights_delta, jnp.float32)
+        )
+    w = jnp.asarray(weights, jnp.float32)
+    n, m = forest.n, forest.m
+    if int(w.shape[0]) != n:
+        raise ValueError(
+            f"delta update keeps n fixed: forest has {n} intervals, "
+            f"got {int(w.shape[0])} weights"
+        )
+    new_cdf = _cdf_builder(mesh, axis, n, row_scan)(scan_chunk_rows(w))
+    old_bits = np.asarray(forest.cdf).view(np.uint32)
+    new_bits = np.asarray(new_cdf).view(np.uint32)
+    cb = chunk_bounds(n)
+    changed_cdf = np.flatnonzero(new_bits[1:] != old_bits[1:])
+    dirty_chunks = int(
+        np.unique(np.searchsorted(cb, changed_cdf, side="right") - 1).size
+    )
+
+    if changed_cdf.size == 0:
+        stats = dict(
+            dirty_shards=0, dirty_chunks=0, plan_changed=False, rebuilt=False
+        )
+        out = forest._replace(cdf=new_cdf)  # same bits; fresh buffer
+        return (out, stats) if with_stats else out
+
+    bounds = np.asarray(forest.cell_bounds, np.int64)
+    # Algorithm-1 re-work for the changed weights, via the Pallas kernel
+    # entry point: new distances feed the rebuild, the changed-bits mask
+    # drives per-shard dirtiness.
+    d_new, leaf_changed = ops.forest_delta_update(
+        lower_bounds(forest.cdf), lower_bounds(new_cdf), m,
+        use_pallas=_use_pallas(),
+    )
+    cells_np = np.asarray(_device_cells(new_cdf, m))
+    starts, counts, cap = _plan_windows(cells_np, bounds, n)
+    w_starts = np.clip(starts, 0, n - cap)
+    plan_same = (
+        cap == forest.capacity
+        and np.array_equal(w_starts, np.asarray(forest.window_start))
+        and np.array_equal(counts, np.asarray(forest.window_count))
+    )
+    lc = np.asarray(leaf_changed)
+    dirty = np.array(
+        [bool(lc[s : s + c].any()) for s, c in zip(starts, counts)]
+    )
+    out = build_forest_from_cdf_sharded(
+        new_cdf, m, mesh=mesh, axis=axis, fallback_slack=fallback_slack,
+        partition=bounds, d_full=d_new, cells_np=cells_np,
+    )
+    if plan_same:
+        # Clean shards' windows are untouched bit ranges: keep the existing
+        # partials byte-for-byte (the rebuilt rows are provably identical —
+        # the select documents the reuse and spares the copies).
+        sel = jnp.asarray(dirty)[:, None]
+        out = out._replace(
+            left=jnp.where(sel, out.left, forest.left),
+            right=jnp.where(sel, out.right, forest.right),
+        )
+    stats = dict(
+        dirty_shards=int(dirty.sum()) if plan_same else D,
+        dirty_chunks=dirty_chunks,
+        plan_changed=not plan_same,
+        rebuilt=True,
+    )
+    return (out, stats) if with_stats else out
 
 
 def sample_sharded(
@@ -268,12 +610,13 @@ def sample_sharded(
     axis: str = "data",
     use_fallback: bool = True,
 ) -> jax.Array:
-    """Algorithm 2 over the sharded forest: owner-routed local descent.
+    """Algorithm 2 over the sharded forest: owner-routed windowed descent.
 
-    Each uniform's owning shard is pure arithmetic (``cell // (m/D)``); the
-    owner resolves it against its local partial node arrays (every edge of an
-    owned cell's tree stays inside the shard) and the per-lane results merge
-    with a masked ``psum`` — exact, because every lane has exactly one owner.
+    Each uniform's owning shard is found against the replicated partition
+    bounds; the owner resolves it over its local window (every edge of an
+    owned cell's tree stays inside the window, and global node id minus
+    window start is the local slot) and the per-lane results merge with a
+    masked ``psum`` — exact, because every lane has exactly one owner.
     Elementwise identical to ``core.sample.sample_forest`` on the gathered
     forest. Returns global interval ids, replicated."""
     mesh = mesh if mesh is not None else default_mesh(axis)
@@ -282,30 +625,31 @@ def sample_sharded(
         raise ValueError(
             f"forest has {forest.n_shards} shards but mesh axis has {D}"
         )
-    return _sampler(mesh, axis, forest.m, forest.n, use_fallback)(
+    return _sampler(
+        mesh, axis, forest.m, forest.n, forest.capacity, use_fallback
+    )(
         forest.table, forest.left, forest.right, forest.fallback,
-        forest.cdf, forest.cell_first, jnp.asarray(xi, jnp.float32),
+        forest.cdf, forest.cell_first, forest.cell_bounds,
+        forest.window_start, jnp.asarray(xi, jnp.float32),
     )
 
 
 @functools.lru_cache(maxsize=128)
-def _sampler(mesh: Mesh, axis: str, m: int, n: int, use_fallback: bool):
-    """Cached jitted owner-routed sampling program."""
-    m_local = m // int(mesh.shape[axis])
+def _sampler(mesh: Mesh, axis: str, m: int, n: int, cap: int, use_fallback: bool):
+    """Cached jitted owner-routed windowed sampling program."""
 
-    def shard_fn(table_l, left_l, right_l, fb_l, cdf, cell_first, xi):
+    def shard_fn(table, left_l, right_l, fb, cdf, cell_first, bounds, starts, xi):
         idx = jax.lax.axis_index(axis)
         left_l, right_l = left_l[0], right_l[0]
+        start = starts[idx]
         g = jnp.clip(jnp.floor(xi * jnp.float32(m)).astype(jnp.int32), 0, m - 1)
-        cell_lo = idx * m_local
-        owned = (g >= cell_lo) & (g < cell_lo + m_local)
-        gl = jnp.clip(g - cell_lo, 0, m_local - 1)
-        j = jnp.where(owned, table_l[gl], jnp.int32(-1))
+        owned = (g >= bounds[idx]) & (g < bounds[idx + 1])
+        j = jnp.where(owned, table[g], jnp.int32(-1))
 
         if use_fallback:
-            fb = owned & fb_l[gl] & (j >= 0)
+            flagged = owned & fb[g] & (j >= 0)
             bal = _bisect(cdf, xi, cell_first[g], cell_first[g + 1], 32)
-            j = jnp.where(fb, ~bal, j)
+            j = jnp.where(flagged, ~bal, j)
 
         def cond(state):
             j, it = state
@@ -313,9 +657,9 @@ def _sampler(mesh: Mesh, axis: str, m: int, n: int, use_fallback: bool):
 
         def body(state):
             j, it = state
-            jj = jnp.clip(j, 0, n - 1)
-            go_left = xi < cdf[jj]
-            nxt = jnp.where(go_left, left_l[jj], right_l[jj])
+            jw = jnp.clip(j - start, 0, cap - 1)     # window slot of node j
+            go_left = xi < cdf[jnp.clip(j, 0, n - 1)]
+            nxt = jnp.where(go_left, left_l[jw], right_l[jw])
             return jnp.where(j >= 0, nxt, j), it + 1
 
         j, _ = jax.lax.while_loop(cond, body, (j, jnp.int32(0)))
@@ -323,21 +667,35 @@ def _sampler(mesh: Mesh, axis: str, m: int, n: int, use_fallback: bool):
 
     return jax.jit(shard_map(
         shard_fn, mesh=mesh,
-        in_specs=(P(axis), P(axis), P(axis), P(axis), P(), P(), P()),
+        in_specs=(P(), P(axis), P(axis), P(), P(), P(), P(), P(), P()),
         out_specs=P(), check_rep=False,
     ))
 
 
 def gather_forest(forest: ShardedForest) -> RadixForest:
-    """Combine the per-shard partials into a single-device ``RadixForest``.
+    """Combine the per-shard windows into a single-device ``RadixForest``.
 
-    Slot ownership is disjoint and ``INVALID`` is the int32 minimum, so an
-    elementwise max over the shard axis is the exact union of the writes."""
+    Slot ownership is disjoint and ``INVALID`` is the int32 minimum, so
+    scatter-maxing every shard's window at its global offset is the exact
+    union of the writes (window padding/overlap only ever contributes
+    ``INVALID``)."""
+    D, cap = forest.left.shape
+    n = forest.n
+    idx = (
+        forest.window_start[:, None].astype(jnp.int32)
+        + jnp.arange(cap, dtype=jnp.int32)[None, :]
+    ).reshape(-1)
+    left = jnp.full((n,), INVALID, jnp.int32).at[idx].max(
+        forest.left.reshape(-1), mode="drop"
+    )
+    right = jnp.full((n,), INVALID, jnp.int32).at[idx].max(
+        forest.right.reshape(-1), mode="drop"
+    )
     return RadixForest(
         forest.cdf,
         forest.table,
-        jnp.max(forest.left, axis=0),
-        jnp.max(forest.right, axis=0),
+        left,
+        right,
         forest.cell_first,
         forest.fallback,
     )

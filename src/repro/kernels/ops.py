@@ -16,6 +16,7 @@ from repro.core.forest import RadixForest
 from . import ref
 from .cdf_scan import cdf_scan as _cdf_scan
 from .forest_delta import forest_delta as _forest_delta
+from .forest_delta import forest_delta_update as _forest_delta_update
 from .forest_sample import forest_sample as _forest_sample
 from .sample_tiled import sample_rows as _sample_rows
 
@@ -65,3 +66,12 @@ def forest_delta(data: jax.Array, m: int, use_pallas: bool = True) -> jax.Array:
     if not use_pallas:
         return ref.ref_forest_delta(data, m)
     return _forest_delta(data, m, interpret=_interpret())
+
+
+def forest_delta_update(
+    data_old: jax.Array, data_new: jax.Array, m: int, use_pallas: bool = True
+):
+    """New separator distances + changed-leaf-bits mask for a weight update."""
+    if not use_pallas:
+        return ref.ref_forest_delta_update(data_old, data_new, m)
+    return _forest_delta_update(data_old, data_new, m, interpret=_interpret())

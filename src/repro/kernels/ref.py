@@ -60,11 +60,22 @@ def ref_forest_sample(
 
 
 def ref_forest_delta(data: jax.Array, m: int) -> jax.Array:
-    """Oracle for kernels.forest_delta.forest_delta."""
+    """Oracle for kernels.forest_delta.forest_delta. Cells are clipped to
+    [0, m-1] exactly like core.forest._cells, so the crossing mask is the
+    tree builder's by construction, not by a rounding argument."""
     bits = jax.lax.bitcast_convert_type(data.astype(jnp.float32), jnp.uint32)
     raw = bits[:-1] ^ bits[1:]
-    cells = jnp.floor(data * jnp.float32(m)).astype(jnp.int32)
+    cells = jnp.clip(
+        jnp.floor(data * jnp.float32(m)).astype(jnp.int32), 0, m - 1
+    )
     return jnp.where(cells[:-1] != cells[1:], jnp.uint32(DIST_SENTINEL), raw)
+
+
+def ref_forest_delta_update(data_old, data_new, m: int):
+    """Oracle for kernels.forest_delta.forest_delta_update."""
+    bits_old = jax.lax.bitcast_convert_type(data_old.astype(jnp.float32), jnp.uint32)
+    bits_new = jax.lax.bitcast_convert_type(data_new.astype(jnp.float32), jnp.uint32)
+    return ref_forest_delta(data_new, m), bits_old != bits_new
 
 
 def ref_flash_attention(q, k, v, causal: bool = True) -> jax.Array:

@@ -19,7 +19,7 @@ import jax.numpy as jnp
 
 from repro.core import build_forest, sample_forest
 from repro.core.alias import build_alias, sample_alias
-from repro.core.cdf import normalize_weights
+from repro.core.cdf import normalize_weights, updated_weights
 from repro.core.lds import radical_inverse_base2
 from repro.kernels import ops
 
@@ -52,12 +52,18 @@ class ForestSampler:
     inverts the CDF at the slots' QMC streams (monotone warp, so the
     stratification survives). ``sharded=True`` opts into the cell-partitioned
     :mod:`repro.dist.forest` path: guide cells are partitioned over the mesh
-    data axis and each draw is resolved by its owning shard (bit-identical to
-    the single-device path — the dist conformance suite gates that)."""
+    data axis (``rebalance=True`` balances the partition by leaf occupancy
+    for spiky priors) and each draw is resolved by its owning shard
+    (bit-identical to the single-device path — the dist conformance suite
+    gates that). :meth:`update_weights` swaps the distribution in place —
+    the sharded path rebuilds only the shards whose windows changed, and the
+    per-slot QMC streams continue uninterrupted."""
 
     def __init__(self, weights, m: int | None = None, sharded: bool = False,
-                 mesh=None, n_slots: int = 64, seed: int = 0):
-        w = normalize_weights(np.asarray(weights, np.float64))
+                 mesh=None, n_slots: int = 64, seed: int = 0,
+                 rebalance: bool = False):
+        self._raw = np.asarray(weights, np.float64)
+        w = normalize_weights(self._raw)
         m = m or max(len(w), 16)
         self.sharded = sharded
         self.streams = QmcStreams(n_slots, seed)
@@ -65,11 +71,25 @@ class ForestSampler:
             from repro.dist import forest as DF  # lazy: serve stays importable
 
             self.forest, self.mesh = DF.build_forest_sharded_auto(
-                jnp.asarray(w), m, mesh=mesh
+                jnp.asarray(w), m, mesh=mesh, rebalance=rebalance
             )
         else:
             self.mesh = None
             self.forest = build_forest(jnp.asarray(w), m)
+
+    def update_weights(self, weights=None, *, delta=None) -> None:
+        """In-place distribution update (new full weights, or a delta added
+        to the current raw weights). Slot streams keep their counters, so a
+        long-lived serving loop re-targets without a stratification reset."""
+        self._raw, w = updated_weights(self._raw, weights, delta=delta)
+        if self.sharded:
+            from repro.dist import forest as DF
+
+            self.forest = DF.update_forest_sharded(
+                self.forest, jnp.asarray(w), mesh=self.mesh
+            )
+        else:
+            self.forest = build_forest(jnp.asarray(w), self.forest.m)
 
     def sample(self, slots: np.ndarray) -> np.ndarray:
         xi = jnp.asarray(self.streams.next(slots))

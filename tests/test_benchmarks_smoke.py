@@ -53,13 +53,29 @@ def test_construction_sharded_bench_runs():
     rows = run_sharded(sizes=(1 << 10,))
     assert rows and all(r["us"] > 0 for r in rows)
     assert rows[0]["devices"] == 1  # sweep always includes the 1-shard row
+    # windowed per-device work columns
+    assert all(0 < r["window"] <= 1 << 10 for r in rows)
+    assert all(0 < r["util"] <= 1.0 for r in rows)
+
+
+def test_construction_delta_bench_runs():
+    from benchmarks.construction import run_delta
+
+    rows = run_delta(sizes=(1 << 10,))
+    kinds = {r["kind"] for r in rows}
+    assert kinds == {"noop", "sparse", "full"}
+    by = {r["kind"]: r for r in rows}
+    assert by["noop"]["dirty_shards"] == 0 and by["noop"]["dirty_chunks"] == 0
+    assert by["sparse"]["dirty_chunks"] == 1
+    assert all(r["update_us"] > 0 and r["full_us"] > 0 for r in rows)
 
 
 def test_throughput_sharded_bench_runs():
     from benchmarks.sampling_throughput import run_sharded
 
     rows = run_sharded(n=1 << 10, batch=1 << 12)
-    assert any(name.startswith("forest_sharded_d") for name, _, _ in rows)
+    assert any(r["name"].startswith("forest_sharded_d") for r in rows)
+    assert all(0 < r["window"] <= 1 << 10 for r in rows)
 
 
 def test_bench_regression_key_extraction():

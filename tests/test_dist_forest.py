@@ -1,22 +1,29 @@
 """Differential conformance suite for ``repro.dist.forest``.
 
 The contract under test (module docstring of ``repro.dist.forest``): the
-cell-partitioned sharded build is **bit-identical** to the single-device
-``build_forest`` (cdf/table/left/right/cell_first/fallback after gather), and
+cell-partitioned **windowed** sharded build is **bit-identical** to the
+single-device ``build_forest`` (cdf/table/left/right/cell_first/fallback
+after gather) for equal, occupancy-rebalanced, and explicit partitions;
 owner-routed ``sample_sharded`` agrees **elementwise** with ``sample_forest``
-on shared uniforms — plus chi-square goodness of fit and device-count
-determinism (1 vs 8 shards).
+on shared uniforms; ``update_forest_sharded`` is bit-identical to a
+from-scratch sharded rebuild over the same partition (including the no-op
+and all-cells-changed degenerates); and the per-device build window
+*provably shrinks* with the shard count (asserted on window sizes, never
+wall-clock).
 
-The 8-fake-device matrix runs in subprocesses (``slow`` lane: each pays a
+The 8-fake-device matrices run in subprocesses (``slow`` lane: each pays a
 fresh jax init). The in-process tests run at whatever device count this
-process's jax has (8 in CI via ``XLA_FLAGS``, 1 locally) so the routing and
-combination logic is exercised in the fast lane too.
+process's jax has (8 in CI via ``XLA_FLAGS``, 1 locally) so the routing,
+windowing, and combination logic is exercised in the fast lane too.
 """
+import itertools
 import os
 import subprocess
 import sys
 import textwrap
 
+import hypothesis
+import hypothesis.strategies as st
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -47,6 +54,29 @@ def _run(script: str, devices: int = 8, timeout: int = 900):
         [sys.executable, "-c", script], capture_output=True, text=True,
         env=env, cwd=os.getcwd(), timeout=timeout,
     )
+
+
+def _assert_gather_bit_identical(w, m, sf):
+    f1 = build_forest(jnp.asarray(w), m)
+    a, b = forest_to_numpy(f1), forest_to_numpy(DF.gather_forest(sf))
+    for k in _KEYS:
+        assert np.array_equal(a[k], b[k]), (m, k)
+    return f1
+
+
+def _assert_sharded_equal(a: DF.ShardedForest, b: DF.ShardedForest):
+    """Every field bitwise equal — the ShardedForest-level identity the
+    delta-update contract promises (stronger than gathered identity)."""
+    for k in DF.ShardedForest._fields:
+        x, y = np.asarray(getattr(a, k)), np.asarray(getattr(b, k))
+        assert x.dtype == y.dtype and np.array_equal(x, y), k
+
+
+def _int_weights(n: int, rng) -> np.ndarray:
+    """Integer-valued float32 weights with an exactly-representable scan:
+    every prefix sum stays a small int, so float adds are exact and a
+    +1/-1 swap between neighbors perturbs exactly one CDF entry."""
+    return rng.integers(2, 50, n).astype(np.float32)
 
 
 # ------------------------------------------------------- in-process coverage
@@ -109,6 +139,126 @@ def test_shard_count_mismatch_raises():
         DF.sample_sharded(sf, jnp.zeros((4,), jnp.float32), mesh=_mesh())
 
 
+def test_windowed_plan_exercised_at_ambient_devices():
+    """The windowed path is live at whatever device count this process has:
+    the per-shard node arrays are capacity-sized windows (not (D, n) full
+    copies), the owned leaf windows tile [0, n) exactly, and with more than
+    one shard the static window is strictly smaller than the world."""
+    mesh = _mesh()
+    D = int(mesh.shape["data"])
+    n, m = 2048, 512
+    w = np.random.default_rng(1).random(n).astype(np.float32) + np.float32(1e-3)
+    sf = DF.build_forest_sharded(jnp.asarray(w), m, mesh=mesh)
+    counts = np.asarray(sf.window_count)
+    starts = np.asarray(sf.window_start)
+    bounds = np.asarray(sf.cell_bounds)
+    assert sf.left.shape == (D, sf.capacity) == sf.right.shape
+    assert counts.sum() == n == sf.n
+    assert counts.max() <= sf.capacity
+    assert bounds[0] == 0 and bounds[-1] == m and np.all(np.diff(bounds) >= 0)
+    assert np.all(starts >= 0) and np.all(starts + sf.capacity <= n)
+    if D > 1:
+        # the point of the windowed refactor: per-device work < world size
+        assert sf.capacity < n
+    _assert_gather_bit_identical(w, m, sf)
+
+
+def test_rebalanced_build_inprocess():
+    """Occupancy rebalancing: bit-identity holds for unequal cell ranges and
+    the rebalanced capacity never exceeds the equal-partition capacity (the
+    load-balance objective, monotone under capacity rounding)."""
+    mesh = _mesh()
+    D = int(mesh.shape["data"])
+    rng = np.random.default_rng(7)
+    n, m = 600, 64
+    spiky = rng.random(n).astype(np.float32) * 1e-5
+    spiky[rng.integers(0, n, 12)] += 50.0
+    zipf = (1.0 / np.arange(1, n + 1, dtype=np.float64) ** 1.3).astype(np.float32)
+    for w in (spiky, zipf):
+        sf_eq = DF.build_forest_sharded(jnp.asarray(w), m, mesh=mesh)
+        sf_rb = DF.build_forest_sharded(
+            jnp.asarray(w), m, mesh=mesh, rebalance=True
+        )
+        assert sf_rb.capacity <= sf_eq.capacity
+        f1 = _assert_gather_bit_identical(w, m, sf_rb)
+        xi = rng.random(512).astype(np.float32)
+        s1 = np.asarray(sample_forest(f1, jnp.asarray(xi)))
+        s2 = np.asarray(DF.sample_sharded(sf_rb, jnp.asarray(xi), mesh=mesh))
+        assert np.array_equal(s1, s2)
+
+
+def test_delta_update_inprocess():
+    """update_forest_sharded == from-scratch rebuild over the same partition,
+    as a ShardedForest (every field, bitwise), at this process's device
+    count — no-op, sparse (exact integer scan, one changed CDF entry), and
+    all-cells-changed."""
+    mesh = _mesh()
+    rng = np.random.default_rng(11)
+    n, m = 1024, 64
+    w0 = _int_weights(n, rng)
+    sf0 = DF.build_forest_sharded(jnp.asarray(w0), m, mesh=mesh)
+
+    # No-op: identical weights, and exact power-of-two scaling (the scan
+    # scales exactly, the normalization divides it back out) — the tree
+    # rebuild must not even run.
+    for w_same in (w0, w0 * np.float32(2.0)):
+        upd, stats = DF.update_forest_sharded(
+            sf0, jnp.asarray(w_same), mesh=mesh, with_stats=True
+        )
+        assert not stats["rebuilt"] and stats["dirty_shards"] == 0
+        _assert_sharded_equal(upd, sf0)
+
+    # Sparse: +1/-1 between neighbors keeps every other prefix sum (and the
+    # total) bit-identical, so exactly one leaf moves -> at most one shard
+    # rebuilds when the window plan is unchanged.
+    w1 = w0.copy()
+    w1[500] += 1.0
+    w1[501] -= 1.0
+    upd, stats = DF.update_forest_sharded(
+        sf0, jnp.asarray(w1), mesh=mesh, with_stats=True
+    )
+    ref = DF.build_forest_sharded(
+        jnp.asarray(w1), m, mesh=mesh, partition=np.asarray(sf0.cell_bounds)
+    )
+    _assert_sharded_equal(upd, ref)
+    _assert_gather_bit_identical(w1, m, upd)
+    if not stats["plan_changed"]:
+        assert stats["dirty_shards"] == 1
+    assert stats["dirty_chunks"] == 1
+
+    # All cells changed: fresh random weights re-target every shard.
+    w2 = rng.random(n).astype(np.float32) + np.float32(1e-3)
+    upd2 = DF.update_forest_sharded(sf0, jnp.asarray(w2), mesh=mesh)
+    ref2 = DF.build_forest_sharded(
+        jnp.asarray(w2), m, mesh=mesh, partition=np.asarray(sf0.cell_bounds)
+    )
+    _assert_sharded_equal(upd2, ref2)
+    _assert_gather_bit_identical(w2, m, upd2)
+
+    # n must stay fixed (delta updates never resize the distribution).
+    with pytest.raises(ValueError):
+        DF.update_forest_sharded(sf0, jnp.asarray(w2[:-1]), mesh=mesh)
+
+
+def test_delta_update_weights_delta_form():
+    """The weights_delta + base_weights convenience forms the same float32
+    sum the caller would."""
+    mesh = _mesh()
+    rng = np.random.default_rng(13)
+    w0 = rng.random(256).astype(np.float32) + np.float32(1e-3)
+    delta = np.zeros(256, np.float32)
+    delta[10] = np.float32(0.25)
+    sf0 = DF.build_forest_sharded(jnp.asarray(w0), 64, mesh=mesh)
+    a = DF.update_forest_sharded(
+        sf0, weights_delta=delta, base_weights=w0, mesh=mesh
+    )
+    b = DF.update_forest_sharded(sf0, jnp.asarray(w0) + jnp.asarray(delta),
+                                 mesh=mesh)
+    _assert_sharded_equal(a, b)
+    with pytest.raises(ValueError):
+        DF.update_forest_sharded(sf0, weights_delta=delta, mesh=mesh)
+
+
 def test_forest_sampler_sharded_serve_path():
     """serve.sampler.ForestSampler: the opt-in sharded guide path must draw
     exactly what the single-device path draws (same QMC streams, bit-identical
@@ -123,6 +273,37 @@ def test_forest_sampler_sharded_serve_path():
         assert np.array_equal(a.sample(slots), b.sample(slots))
 
 
+def test_forest_sampler_update_weights_matches_fresh():
+    """In-place weight update on the sharded serve path: after update, the
+    sampler draws exactly what a fresh sampler over the new weights draws
+    (streams at the same counters), and the QMC counters are preserved."""
+    from repro.serve.sampler import ForestSampler
+
+    rng = np.random.default_rng(21)
+    w0 = rng.random(80) ** 4 + 1e-6
+    w1 = rng.random(80) ** 4 + 1e-6
+    for sharded in (False, True):
+        kw = dict(m=64, sharded=sharded, seed=3)
+        if sharded:
+            kw["mesh"] = _mesh()
+        a = ForestSampler(w0, **kw)
+        a.update_weights(w1)
+        b = ForestSampler(w1, **kw)
+        slots = np.arange(24)
+        for _ in range(3):
+            assert np.array_equal(a.sample(slots), b.sample(slots))
+        # delta form: additive on the raw weights
+        c = ForestSampler(w0, **kw)
+        c.update_weights(delta=w1 - w0)
+        d = ForestSampler(w1, **kw)
+        for _ in range(2):
+            assert np.array_equal(c.sample(slots), d.sample(slots))
+        with pytest.raises(ValueError):
+            c.update_weights(w1, delta=w1 - w0)  # ambiguous: exactly one
+        with pytest.raises(ValueError):
+            c.update_weights()
+
+
 def test_mixture_sampler_sharded_matches():
     from repro.data.mixture import MixtureSampler
 
@@ -131,6 +312,77 @@ def test_mixture_sampler_sharded_matches():
     b = MixtureSampler(w, m=64, seed=1, sharded=True, mesh=_mesh())
     for step in (0, 7):
         assert np.array_equal(a.sample(step, 256), b.sample(step, 256))
+
+
+def test_mixture_sampler_update_weights():
+    """Curriculum shift: update_weights re-targets in place; draws at any
+    step equal a fresh sampler's draws over the new mixture."""
+    from repro.data.mixture import MixtureSampler
+
+    rng = np.random.default_rng(17)
+    w0 = rng.random(24) + 1e-3
+    w1 = rng.random(24) + 1e-3
+    for sharded in (False, True):
+        kw = dict(m=64, seed=1, sharded=sharded)
+        if sharded:
+            kw["mesh"] = _mesh()
+        a = MixtureSampler(w0, **kw)
+        a.update_weights(w1)
+        b = MixtureSampler(w1, **kw)
+        for step in (0, 5):
+            assert np.array_equal(a.sample(step, 128), b.sample(step, 128))
+
+
+# --------------------------------------------- occupancy partition properties
+
+settings = hypothesis.settings(max_examples=40, deadline=None)
+
+
+def _optimal_max_load(counts, d: int) -> int:
+    """Brute-force minimal max segment load over contiguous d-partitions."""
+    cum = np.concatenate([[0], np.cumsum(counts)]).astype(np.int64)
+    m = len(counts)
+    best = int(cum[-1])
+    for cuts in itertools.combinations_with_replacement(range(m + 1), d - 1):
+        b = [0, *cuts, m]
+        best = min(best, max(int(cum[b[i + 1]] - cum[b[i]]) for i in range(d)))
+    return best
+
+
+@settings
+@hypothesis.given(
+    counts=st.lists(st.integers(min_value=0, max_value=30),
+                    min_size=1, max_size=8),
+    d=st.integers(min_value=1, max_value=4),
+)
+def test_occupancy_partition_properties(counts, d):
+    """Cell-aligned, contiguous, covers every cell, deterministic, and
+    optimally balanced (brute-forced) — and the derived leaf windows tile
+    the leaf space with per-shard count <= the static capacity."""
+    b = DF.occupancy_partition(counts, d)
+    assert b.shape == (d + 1,)
+    assert b[0] == 0 and b[-1] == len(counts)      # covers all cells
+    assert np.all(np.diff(b) >= 0)                 # contiguous, cell-aligned
+    loads = [int(sum(counts[b[i]:b[i + 1]])) for i in range(d)]
+    assert max(loads) == _optimal_max_load(counts, d)
+    assert np.array_equal(b, DF.occupancy_partition(counts, d))  # deterministic
+
+    total = int(sum(counts))
+    if total:
+        cells = np.repeat(np.arange(len(counts)), counts)
+        starts, cnts, cap = DF._plan_windows(cells, b, total)
+        assert np.array_equal(cnts, loads)
+        assert cnts.max() <= cap <= total          # capacity bound, windowed
+        assert starts[0] == 0 and np.all(starts[1:] == starts[:-1] + cnts[:-1])
+
+
+def test_occupancy_partition_rejects_bad_input():
+    with pytest.raises(ValueError):
+        DF.occupancy_partition([], 2)
+    with pytest.raises(ValueError):
+        DF.occupancy_partition([1, 2], 0)
+    with pytest.raises(ValueError):
+        DF.resolve_partition(8, 2, partition=[0, 3, 7])  # doesn't reach m
 
 
 # ------------------------------------------- 8-fake-device matrix (slow lane)
@@ -156,6 +408,24 @@ _FAMILIES = textwrap.dedent("""
         if kind == "wide":
             return (10.0 ** rng.uniform(-30, 30, n)).astype(np.float32)
         return rng.random(1).astype(np.float32) + np.float32(0.5)
+""")
+
+_REBAL_FAMILIES = textwrap.dedent("""
+    import numpy as np
+
+    KINDS = ("spiky", "zipf", "onehot")
+
+    def fuzz_weights(kind, n, rng):
+        if kind == "spiky":
+            w = rng.random(n).astype(np.float32) * np.float32(1e-5)
+            w[rng.integers(0, n, max(n // 16, 1))] += np.float32(50.0)
+            return w
+        if kind == "zipf":
+            r = np.arange(1, n + 1, dtype=np.float64)
+            return (1.0 / r ** 1.3).astype(np.float32) + np.float32(1e-12)
+        w = np.full(n, 1e-7, np.float32)
+        w[rng.integers(0, n)] = 1.0
+        return w
 """)
 
 
@@ -192,6 +462,132 @@ def test_conformance_matrix_8dev():
     """)
     p = _run(script)
     assert "CONFORMANCE_OK" in p.stdout, p.stdout[-2000:] + p.stderr[-4000:]
+
+
+@pytest.mark.slow
+def test_rebalanced_matrix_and_window_shrink_8dev():
+    """Rebalanced-partition fuzz matrix: spiky/Zipf/one-hot x m in
+    {8, 64, 1024} x D in {1, 2, 4, 8} — occupancy-balanced windowed builds
+    are bit-identical to core.build_forest and sample_sharded agrees
+    elementwise. Then the scaling claim itself: for a spread distribution
+    the static per-device window strictly shrinks as the shard count grows
+    (window sizes, not wall-clock)."""
+    script = _REBAL_FAMILIES + textwrap.dedent("""
+        import jax, jax.numpy as jnp
+        from jax.sharding import Mesh
+        from repro.core import build_forest, forest_to_numpy, sample_forest
+        from repro.dist import forest as DF
+
+        KEYS = ("cdf", "table", "left", "right", "cell_first", "fallback")
+        devs = jax.devices()
+        assert len(devs) == 8
+        checked = 0
+        for m in (8, 64, 1024):
+            rng = np.random.default_rng(m)
+            for kind in KINDS:
+                w = fuzz_weights(kind, 300, rng)
+                f1 = build_forest(jnp.asarray(w), m)
+                xi = jnp.asarray(rng.random(512).astype(np.float32))
+                s1 = np.asarray(sample_forest(f1, xi))
+                for D in (1, 2, 4, 8):
+                    mesh = Mesh(np.array(devs[:D]), ("data",))
+                    sf = DF.build_forest_sharded(
+                        jnp.asarray(w), m, mesh=mesh, rebalance=True)
+                    a = forest_to_numpy(f1)
+                    b = forest_to_numpy(DF.gather_forest(sf))
+                    for k in KEYS:
+                        assert np.array_equal(a[k], b[k]), (kind, m, D, k)
+                    s2 = np.asarray(DF.sample_sharded(sf, xi, mesh=mesh))
+                    assert np.array_equal(s1, s2), (kind, m, D)
+                    assert int(np.asarray(sf.window_count).sum()) == sf.n
+                    checked += 1
+        print("REBALANCE_OK", checked)
+
+        # windowed per-device work shrinks with the shard count
+        n = 4096
+        w = np.random.default_rng(0).random(n).astype(np.float32) + 1e-3
+        caps = []
+        for D in (1, 2, 4, 8):
+            mesh = Mesh(np.array(devs[:D]), ("data",))
+            sf = DF.build_forest_sharded(jnp.asarray(w), n, mesh=mesh)
+            caps.append(sf.capacity)
+        assert caps[0] == n
+        assert caps[0] > caps[1] > caps[2] > caps[3], caps
+        assert caps[3] <= n // 4, caps
+        print("WINDOW_SHRINK_OK", caps)
+    """)
+    p = _run(script)
+    assert "REBALANCE_OK" in p.stdout, p.stdout[-2000:] + p.stderr[-4000:]
+    assert "WINDOW_SHRINK_OK" in p.stdout, p.stdout[-2000:] + p.stderr[-4000:]
+
+
+@pytest.mark.slow
+def test_delta_update_matrix_8dev():
+    """Delta-update differential gate at 8 shards: perturbations on k shards
+    produce a ShardedForest bit-identical to a from-scratch sharded rebuild
+    over the same partition (and a gather bit-identical to the single-device
+    build) — no-op, one-leaf-exact, and all-cells-changed, over both the
+    equal and the occupancy-rebalanced partition."""
+    script = textwrap.dedent("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import build_forest, forest_to_numpy
+        from repro.dist import forest as DF
+
+        KEYS = ("cdf", "table", "left", "right", "cell_first", "fallback")
+        mesh = DF.default_mesh()
+        assert int(mesh.shape["data"]) == 8
+
+        def assert_sharded_equal(a, b, tag):
+            for k in DF.ShardedForest._fields:
+                x, y = np.asarray(getattr(a, k)), np.asarray(getattr(b, k))
+                assert np.array_equal(x, y), (tag, k)
+
+        def assert_single_device(w, m, sf, tag):
+            a = forest_to_numpy(build_forest(jnp.asarray(w), m))
+            b = forest_to_numpy(DF.gather_forest(sf))
+            for k in KEYS:
+                assert np.array_equal(a[k], b[k]), (tag, k)
+
+        rng = np.random.default_rng(23)
+        n, m = 1024, 64
+        w0 = rng.integers(2, 50, n).astype(np.float32)  # exact integer scan
+        for rebalance in (False, True):
+            sf0 = DF.build_forest_sharded(
+                jnp.asarray(w0), m, mesh=mesh, rebalance=rebalance)
+            part = np.asarray(sf0.cell_bounds)
+
+            # no-op
+            upd, st = DF.update_forest_sharded(
+                sf0, jnp.asarray(w0), mesh=mesh, with_stats=True)
+            assert not st["rebuilt"] and st["dirty_shards"] == 0
+            assert_sharded_equal(upd, sf0, ("noop", rebalance))
+
+            # sparse: one exact CDF entry moves -> k=1 dirty shard when the
+            # window plan holds
+            w1 = w0.copy(); w1[500] += 1.0; w1[501] -= 1.0
+            upd, st = DF.update_forest_sharded(
+                sf0, jnp.asarray(w1), mesh=mesh, with_stats=True)
+            ref = DF.build_forest_sharded(
+                jnp.asarray(w1), m, mesh=mesh, partition=part)
+            assert_sharded_equal(upd, ref, ("sparse", rebalance))
+            assert_single_device(w1, m, upd, ("sparse", rebalance))
+            if not st["plan_changed"]:
+                assert st["dirty_shards"] == 1, st
+            assert st["dirty_chunks"] == 1, st
+
+            # all cells changed
+            w2 = rng.random(n).astype(np.float32) + np.float32(1e-3)
+            upd2, st2 = DF.update_forest_sharded(
+                sf0, jnp.asarray(w2), mesh=mesh, with_stats=True)
+            ref2 = DF.build_forest_sharded(
+                jnp.asarray(w2), m, mesh=mesh, partition=part)
+            assert_sharded_equal(upd2, ref2, ("full", rebalance))
+            assert_single_device(w2, m, upd2, ("full", rebalance))
+            assert st2["rebuilt"]
+        print("DELTA_OK")
+    """)
+    p = _run(script)
+    assert "DELTA_OK" in p.stdout, p.stdout[-2000:] + p.stderr[-4000:]
 
 
 @pytest.mark.slow

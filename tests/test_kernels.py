@@ -7,7 +7,7 @@ import pytest
 from repro.core import build_forest, normalize_weights, sample_binary
 from repro.kernels import ops, ref
 from repro.kernels.cdf_scan import cdf_scan
-from repro.kernels.forest_delta import forest_delta
+from repro.kernels.forest_delta import forest_delta, forest_delta_update
 from repro.kernels.forest_sample import forest_sample
 from repro.kernels.sample_tiled import sample_rows
 
@@ -138,6 +138,59 @@ def test_forest_delta_matches_ref(n, m):
     got = forest_delta(data, m, interpret=True)
     want = ref.ref_forest_delta(data, m)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("m", [7, 64, 1024, 4096])
+def test_forest_delta_matches_core_separator_distances(m):
+    """The kernel must agree bitwise with the distance array the tree
+    builder actually consumes (core._separator_distances over clipped
+    cells) — pinned on the adversarial boundary case of a huge leading
+    weight pushing every trailing tied lower bound to 1 - 2^-24, the
+    closest data gets to the floor(data * m) == m edge."""
+    from repro.core.cdf import build_cdf, lower_bounds
+    from repro.core.forest import _cells, _separator_distances
+
+    w = np.full(300, 1e-30, np.float32)
+    w[0] = 1.0
+    data = lower_bounds(build_cdf(jnp.asarray(w)))
+    want = np.asarray(_separator_distances(data, _cells(data, m)))
+    got = np.asarray(forest_delta(data, m, interpret=True))
+    np.testing.assert_array_equal(got, want)
+    np.testing.assert_array_equal(
+        np.asarray(ref.ref_forest_delta(data, m)), want
+    )
+
+
+@pytest.mark.parametrize("n,m", [(2, 1), (100, 7), (1023, 64)])
+def test_forest_delta_update_matches_ref(n, m):
+    """The delta-update kernel: new distances == forest_delta(new data), the
+    changed mask == exact bit-pattern inequality, and the pallas/ref ops
+    dispatch agrees."""
+    rng = np.random.default_rng(n + 1)
+    old = np.sort(rng.random(n)).astype(np.float32)
+    new = old.copy()
+    moved = rng.random(n) < 0.3
+    new[moved] = np.nextafter(new[moved], np.float32(1.0))
+    d_got, c_got = forest_delta_update(
+        jnp.asarray(old), jnp.asarray(new), m, interpret=True
+    )
+    d_ref, c_ref = ref.ref_forest_delta_update(
+        jnp.asarray(old), jnp.asarray(new), m
+    )
+    np.testing.assert_array_equal(np.asarray(d_got), np.asarray(d_ref))
+    np.testing.assert_array_equal(np.asarray(c_got), np.asarray(c_ref))
+    np.testing.assert_array_equal(
+        np.asarray(d_got), np.asarray(forest_delta(jnp.asarray(new), m,
+                                                   interpret=True))
+    )
+    np.testing.assert_array_equal(
+        np.asarray(c_got), old.view(np.uint32) != new.view(np.uint32)
+    )
+    via_ops = ops.forest_delta_update(
+        jnp.asarray(old), jnp.asarray(new), m, use_pallas=False
+    )
+    np.testing.assert_array_equal(np.asarray(via_ops[0]), np.asarray(d_got))
+    np.testing.assert_array_equal(np.asarray(via_ops[1]), np.asarray(c_got))
 
 
 def test_ops_dispatch_consistency():
