@@ -28,7 +28,9 @@ _NUM = re.compile(r"^-?\d+(\.\d+)?([eE][+-]?\d+)?$")
 # Sweep coordinates: numeric, but structural — a row is identified by them
 # (n=65536 vanishing from the construction sweep IS a missing row, not value
 # drift). Measurements (us, Mentries_s, max/avg/...) stay free to drift.
-_PARAMS = frozenset({"n", "m", "devices"})
+# "B"/"tenants"/"classes" identify the pool rows (batched-build batch size
+# and the mixed-size-class drain shape).
+_PARAMS = frozenset({"n", "m", "devices", "B", "tenants", "classes"})
 
 
 def line_key(line: str) -> str:

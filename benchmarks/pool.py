@@ -1,0 +1,119 @@
+"""Pool benchmarks: fused batched construction vs per-distribution loops,
+and bulk mixed-size-class sampling throughput (repro.pool).
+
+Sections (CSV; the structure gate pins rows and keys):
+
+  pool_construction,B=...,n=...  — build B distributions at once (one fused
+      vmapped program) vs B sequential ``build_forest`` calls. On this CPU
+      the absolute us are anecdotal; the batched-vs-loop *ratio* is the
+      reproducible fact (per-launch dispatch amortizes across the batch).
+  pool_sampling,tenants=...,classes=...  — a ForestPool drain over mixed
+      size classes: Q (tenant, uniform) pairs resolved with one batched
+      launch per touched class, reported as us per drain and Msamples/s.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import build_forest
+from repro.core.cdf import normalize_weights
+from repro.pool import ForestPool, build_forest_batched
+
+
+def _time(fn, reps: int = 3) -> float:
+    fn()  # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps
+
+
+def run_construction(batches=(16, 64), n: int = 1024):
+    """Build-B-at-once vs loop-of-B: the fused builder's dispatch economy."""
+    rows = []
+    rng = np.random.default_rng(0)
+    for B in batches:
+        W = np.stack([
+            normalize_weights(rng.random(n) ** 8 + 1e-12) for _ in range(B)
+        ])
+        Wj = jnp.asarray(W)
+
+        def batched():
+            f = build_forest_batched(Wj, n)
+            jax.block_until_ready(f.left)
+
+        def loop():
+            for b in range(B):
+                f = build_forest(Wj[b], n)
+            jax.block_until_ready(f.left)
+
+        t_b = _time(batched)
+        t_l = _time(loop)
+        rows.append(
+            {
+                "B": B, "n": n,
+                "batched_us": t_b * 1e6, "loop_us": t_l * 1e6,
+                "speedup": t_l / t_b,
+                "meps": B * n / t_b / 1e6,
+            }
+        )
+    return rows
+
+
+def run_sampling(tenants: int = 64, draws: int = 1 << 14):
+    """Mixed-size-class drain throughput through a populated ForestPool.
+
+    Three size classes (16/64/256) keep the interpret-mode Pallas compile
+    count bounded on CPU; the drain itself is one launch per class."""
+    rng = np.random.default_rng(1)
+    pool = ForestPool()
+    sizes = rng.choice([16, 64, 256], size=tenants)
+    handles = pool.insert_many(
+        [rng.random(s) ** 6 + 1e-9 for s in sizes]
+    )
+    qh = [handles[i] for i in rng.integers(0, tenants, draws)]
+    xi = rng.random(draws).astype(np.float32)
+    rows = []
+    for label, use_pallas in (("pool_ref", False), ("pool_pallas", True)):
+        t = _time(lambda: pool.sample(qh, xi, use_pallas=use_pallas), reps=3)
+        rows.append(
+            {
+                "tenants": tenants,
+                "classes": len(pool.classes),
+                "path": label,
+                "us": t * 1e6,
+                "msps": draws / t / 1e6,
+            }
+        )
+    return rows
+
+
+def main_construction() -> list[str]:
+    return [
+        f"pool_construction,B={r['B']},n={r['n']},"
+        f"batched_us={r['batched_us']:.0f},loop_us={r['loop_us']:.0f},"
+        f"batched_vs_loop={r['speedup']:.2f},"
+        f"batched_Mentries_s={r['meps']:.2f}"
+        for r in run_construction()
+    ]
+
+
+def main_sampling() -> list[str]:
+    return [
+        f"pool_sampling,{r['path']},tenants={r['tenants']},"
+        f"classes={r['classes']},us_per_drain={r['us']:.0f},"
+        f"Msamples_s={r['msps']:.2f}"
+        for r in run_sampling()
+    ]
+
+
+def main() -> list[str]:
+    return main_construction() + main_sampling()
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -21,14 +21,23 @@ def main() -> None:
     ap.add_argument("--json", dest="json_out", metavar="OUT.json", default=None)
     args = ap.parse_args()
     quick, json_out = args.quick, args.json_out
-    from benchmarks import construction, convergence, sampling_throughput, serving_diversity, table1
+    from benchmarks import (
+        construction,
+        convergence,
+        pool,
+        sampling_throughput,
+        serving_diversity,
+        table1,
+    )
 
     sections = [
         ("Table 1 (load counts)", table1.main),
         ("Figs 7/9/1 (QMC convergence & discrepancy)",
          (lambda: _convergence_quick()) if quick else convergence.main),
         ("Construction throughput", construction.main),
+        ("Pool construction", pool.main_construction),
         ("Sampling throughput", sampling_throughput.main),
+        ("Pool sampling", pool.main_sampling),
         ("Serving best-of-n diversity", serving_diversity.main),
     ]
     record: dict[str, dict] = {}

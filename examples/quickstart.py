@@ -1,6 +1,11 @@
 """Quickstart: build a radix tree forest, sample, inspect (paper Secs. 3.1-3.2).
 
   PYTHONPATH=src python examples/quickstart.py
+
+One distribution, many draws is the paper's amortized workload; for the
+multi-tenant twin (thousands of small per-request distributions, batched
+construction + bulk mixed-batch sampling via ``repro.pool``) see
+``examples/pool_serving.py``.
 """
 import numpy as np
 import jax.numpy as jnp

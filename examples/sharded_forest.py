@@ -89,13 +89,15 @@ iw2[n // 2 + 1] -= 1.0   # total preserved -> one CDF entry moves
 updated, stats = DF.update_forest_sharded(
     base, jnp.asarray(iw2), with_stats=True)
 scratch = DF.build_forest_sharded(
-    jnp.asarray(iw2), m, partition=np.asarray(base.cell_bounds))
+    jnp.asarray(iw2), m, partition=np.asarray(base.cell_bounds),
+    capacity=updated.capacity)  # hysteresis may keep the larger window
 for key in updated._fields:
     assert np.array_equal(np.asarray(getattr(updated, key)),
                           np.asarray(getattr(scratch, key))), key
+from repro.core.cdf import SCAN_CHUNKS  # noqa: E402
 print(f"delta update: {stats['dirty_shards']}/{D} shards rebuilt "
-      f"({stats['dirty_chunks']}/8 scan chunks dirty) — ShardedForest "
-      f"bit-identical to a from-scratch rebuild")
+      f"({stats['dirty_chunks']}/{SCAN_CHUNKS} scan chunks dirty) — "
+      f"ShardedForest bit-identical to a from-scratch rebuild")
 noop, nstats = DF.update_forest_sharded(base, jnp.asarray(iw), with_stats=True)
 assert not nstats["rebuilt"]
 print("delta update: no-op delta skips the tree rebuild entirely")

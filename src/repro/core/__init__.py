@@ -23,6 +23,7 @@ from .forest import (
     build_forest_apetrei,
     build_forest_from_cdf,
     depth_stats,
+    forest_from_cdf,
     forest_to_numpy,
     validate_forest,
 )

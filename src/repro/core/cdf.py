@@ -23,7 +23,11 @@ _ONE_MINUS_EPS = np.float32(np.nextafter(np.float32(1.0), np.float32(0.0)))
 # carry chain), so the distributed scan in ``repro.dist.forest`` is bit-
 # identical to this single-device path — which the forest needs, because tree
 # topology depends on the *bit patterns* of the CDF (XOR distances).
-SCAN_CHUNKS = 8
+# 64 is the max shard count exact bit-reproducible sharding supports (D | 64
+# covers every pow2 mesh up to a 64-way data axis); growing past it only
+# needs this constant raised — or the two-level carry hierarchy (chunk rows
+# per device x devices) whose grid is shard-count-independent (ROADMAP).
+SCAN_CHUNKS = 64
 
 
 def normalize_weights(w: np.ndarray) -> np.ndarray:

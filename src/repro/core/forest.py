@@ -297,21 +297,38 @@ def _build_cell_trees(
     return left, right, table, cell_first, fallback
 
 
-@functools.partial(jax.jit, static_argnames=("m", "fallback_slack"))
-def build_forest_from_cdf(
-    cdf: jax.Array, m: int, fallback_slack: int = 2
+def forest_from_cdf(
+    cdf: jax.Array, m: int, fallback_slack: int = 2, d: jax.Array | None = None
 ) -> RadixForest:
-    """TPU-native massively parallel forest construction (see module doc)."""
+    """Unjitted single-distribution build core — the vmap-safe entry.
+
+    Every op here is batchable, so ``jax.vmap`` over a stacked ``(B, n+1)``
+    CDF matrix produces exactly the arrays of B independent builds (the
+    fused batched builder in :mod:`repro.pool.batched` rests on this; its
+    differential tests pin the bit-identity). ``d`` optionally feeds
+    precomputed separator distances (the :mod:`repro.kernels.forest_delta`
+    route used by pool delta updates) — they must match
+    :func:`_separator_distances` bitwise or the forest silently diverges.
+    """
     cdf = jnp.asarray(cdf, jnp.float32)
     n = cdf.shape[0] - 1
     data = lower_bounds(cdf)  # (n,)
     cells = _cells(data, m)
-    d = _separator_distances(data, cells)
+    if d is None:
+        d = _separator_distances(data, cells)
     left, right, table, cf, fallback = _build_cell_trees(
         data, d, cells, m=m, cell_lo=0, m_local=m, fallback_slack=fallback_slack
     )
     cell_first = jnp.concatenate([cf, jnp.int32(n - 1)[None]])
     return RadixForest(cdf, table, left, right, cell_first, fallback)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "fallback_slack"))
+def build_forest_from_cdf(
+    cdf: jax.Array, m: int, fallback_slack: int = 2
+) -> RadixForest:
+    """TPU-native massively parallel forest construction (see module doc)."""
+    return forest_from_cdf(cdf, m, fallback_slack)
 
 
 def build_forest(weights: jax.Array, m: int, fallback_slack: int = 2) -> RadixForest:

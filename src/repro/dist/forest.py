@@ -297,9 +297,7 @@ def _device_cells(cdf: jax.Array, m: int) -> jax.Array:
 
 
 def _use_pallas() -> bool:
-    # The forest_delta kernel compiles natively on TPU; in interpret mode the
-    # pure-jnp reference is the same bits for a fraction of the dispatch cost.
-    return jax.default_backend() == "tpu"
+    return ops.use_pallas_default()
 
 
 def _round_capacity(max_count: int, n: int) -> int:
@@ -393,6 +391,7 @@ def build_forest_from_cdf_sharded(
     rebalance: bool = False,
     d_full: jax.Array | None = None,
     cells_np: np.ndarray | None = None,
+    capacity: int | None = None,
 ) -> ShardedForest:
     """Windowed shard-local forest build over a replicated CDF.
 
@@ -403,6 +402,10 @@ def build_forest_from_cdf_sharded(
     ``core.build_forest_from_cdf(cdf, m)``. ``d_full``/``cells_np`` let the
     delta-update path feed in the distances and cell ids it already
     computed (they must match the device's own — bit-identity rests on it).
+    ``capacity`` pins the static window size instead of the planned one
+    (must fit every shard's owned leaf count) — the hysteresis hook:
+    :func:`update_forest_sharded` passes the previous forest's capacity so
+    occupancy drift below the old window reuses the compiled program.
     """
     mesh = mesh if mesh is not None else default_mesh(axis)
     D = _shard_count(mesh, axis)
@@ -418,6 +421,13 @@ def build_forest_from_cdf_sharded(
         ),
     )
     starts, counts, cap = _plan_windows(cells_np, bounds, n)
+    if capacity is not None:
+        if capacity < counts.max(initial=1):
+            raise ValueError(
+                f"capacity={capacity} below the plan's max owned leaf "
+                f"count {int(counts.max(initial=1))}"
+            )
+        cap = min(int(capacity), n)
     w_starts = np.clip(starts, 0, n - cap)
     m_cap = _round_capacity(np.diff(bounds).max(initial=1), m)
     if d_full is None:
@@ -449,6 +459,7 @@ def build_forest_sharded(
     row_scan=None,
     partition=None,
     rebalance: bool = False,
+    capacity: int | None = None,
 ) -> ShardedForest:
     """Distributed scan -> windowed per-shard cell-range tree build.
 
@@ -463,7 +474,7 @@ def build_forest_sharded(
     cdf = _cdf_builder(mesh, axis, int(w.shape[0]), row_scan)(scan_chunk_rows(w))
     return build_forest_from_cdf_sharded(
         cdf, m, mesh=mesh, axis=axis, fallback_slack=fallback_slack,
-        partition=partition, rebalance=rebalance,
+        partition=partition, rebalance=rebalance, capacity=capacity,
     )
 
 
@@ -515,13 +526,23 @@ def update_forest_sharded(
     changed-leaf-bits mask) comes from :mod:`repro.kernels.forest_delta`.
     Shards whose leaf windows carry no changed bits keep their partial
     arrays byte-for-byte; a no-op delta skips the tree rebuild entirely.
-    The result is **bit-identical** to
-    ``build_forest_sharded(weights, m, partition=forest.cell_bounds)``.
+
+    **Capacity hysteresis**: the fresh plan's capacity is only adopted when
+    it *grows* past the current window — while the new plan still fits,
+    the old (possibly larger) capacity is kept, so an adversarial weight
+    stream oscillating across a 64-leaf granule boundary stops recompiling
+    the windowed build/sampling programs on every update (the regression
+    test drives exactly that stream). The result is **bit-identical** to
+    ``build_forest_sharded(weights, m, partition=forest.cell_bounds,
+    capacity=<the kept capacity>)``, and its gather stays bit-identical to
+    the single-device build (window capacity never affects stored bits).
 
     With ``with_stats=True`` also returns a dict: ``dirty_shards`` /
     ``dirty_chunks`` (scan-grid rows re-spanned by changed CDF entries) /
     ``plan_changed`` (leaf windows moved -> full windowed rebuild) /
-    ``rebuilt`` (the tree-build shard_map actually ran).
+    ``rebuilt`` (the tree-build shard_map actually ran) / ``capacity``
+    (the static window adopted) / ``capacity_kept`` (hysteresis retained a
+    window larger than the fresh plan's).
     """
     mesh = mesh if mesh is not None else default_mesh(axis)
     D = _shard_count(mesh, axis)
@@ -556,7 +577,8 @@ def update_forest_sharded(
 
     if changed_cdf.size == 0:
         stats = dict(
-            dirty_shards=0, dirty_chunks=0, plan_changed=False, rebuilt=False
+            dirty_shards=0, dirty_chunks=0, plan_changed=False, rebuilt=False,
+            capacity=forest.capacity, capacity_kept=False,
         )
         out = forest._replace(cdf=new_cdf)  # same bits; fresh buffer
         return (out, stats) if with_stats else out
@@ -570,7 +592,10 @@ def update_forest_sharded(
         use_pallas=_use_pallas(),
     )
     cells_np = np.asarray(_device_cells(new_cdf, m))
-    starts, counts, cap = _plan_windows(cells_np, bounds, n)
+    starts, counts, fresh_cap = _plan_windows(cells_np, bounds, n)
+    # Hysteresis: keep the compiled program's window while the new plan
+    # still fits; only a genuine overflow re-plans (and recompiles).
+    cap = forest.capacity if fresh_cap <= forest.capacity else fresh_cap
     w_starts = np.clip(starts, 0, n - cap)
     plan_same = (
         cap == forest.capacity
@@ -583,7 +608,7 @@ def update_forest_sharded(
     )
     out = build_forest_from_cdf_sharded(
         new_cdf, m, mesh=mesh, axis=axis, fallback_slack=fallback_slack,
-        partition=bounds, d_full=d_new, cells_np=cells_np,
+        partition=bounds, d_full=d_new, cells_np=cells_np, capacity=cap,
     )
     if plan_same:
         # Clean shards' windows are untouched bit ranges: keep the existing
@@ -599,6 +624,8 @@ def update_forest_sharded(
         dirty_chunks=dirty_chunks,
         plan_changed=not plan_same,
         rebuilt=True,
+        capacity=cap,
+        capacity_kept=cap > fresh_cap,
     )
     return (out, stats) if with_stats else out
 

@@ -12,6 +12,10 @@ is tighter on TPU than on the paper's GPUs.
 Gathers (``jnp.take`` from VMEM) are the honest cost: one per lane per level.
 Depth is bounded (<= ~34 for distinct float32 keys; build flags tied chains
 into fallback cells which ops.py pre-resolves), so `depth` is static.
+
+:func:`forest_sample_batched` is the multi-distribution twin (the
+``repro.pool`` serving workload): B stacked forests resident at once, each
+lane routed into its own tree by a per-lane ``dist_id`` row offset.
 """
 from __future__ import annotations
 
@@ -58,6 +62,114 @@ def _forest_kernel(
 
     j = jax.lax.fori_loop(0, depth, body, j)
     o_ref[...] = ~j
+
+
+def _forest_batched_kernel(
+    cdf_ref, table_ref, left_ref, right_ref, *rest,
+    depth: int, m: int, n: int, fb: bool,
+):
+    """Mixed-batch descent: lane q walks distribution dist_id[q]'s tree.
+
+    The stacked tables stay VMEM-resident as full (B, ...) blocks; each lane
+    resolves its own row by flat row-offset gathers (``dist * stride + idx``)
+    — the packed-table trick that makes batched GPU sampling fast (Lehmann
+    et al. 2021), here with the row id varying per lane so ONE launch drains
+    draws against every distribution in the batch."""
+    if fb:
+        cf_ref, fb_ref, did_ref, xi_ref, o_ref = rest
+    else:
+        did_ref, xi_ref, o_ref = rest
+    xi = xi_ref[...]
+    did = did_ref[...]
+    g = jnp.clip(jnp.floor(xi * jnp.float32(m)).astype(jnp.int32), 0, m - 1)
+    cdf = cdf_ref[...].reshape(-1)      # (B*(n+1),)
+    left = left_ref[...].reshape(-1)    # (B*n,)
+    right = right_ref[...].reshape(-1)
+    cbase = did * (n + 1)               # per-lane row offsets
+    nbase = did * n
+    j = jnp.take(table_ref[...].reshape(-1), did * m + g)
+
+    if fb:
+        # Same degenerate-cell pre-resolution as the shared-distribution
+        # kernel, bisecting each lane's own CDF row (row-local indices).
+        flagged = (jnp.take(fb_ref[...].reshape(-1), did * m + g) > 0) & (j >= 0)
+        cf = cf_ref[...].reshape(-1)    # (B*(m+1),)
+        lo = jnp.take(cf, did * (m + 1) + g)
+        hi = jnp.take(cf, did * (m + 1) + g + 1)
+
+        def bisect_body(_, state):
+            lo, hi = state
+            mid = (lo + hi + 1) >> 1
+            ge = xi >= jnp.take(cdf, cbase + mid)
+            return jnp.where(ge, mid, lo), jnp.where(ge, hi, mid - 1)
+
+        lo, _ = jax.lax.fori_loop(0, 32, bisect_body, (lo, hi))
+        j = jnp.where(flagged, ~lo, j)
+
+    def body(_, j):
+        jj = jnp.clip(j, 0, n - 1)
+        go_left = xi < jnp.take(cdf, cbase + jj)
+        nxt = jnp.where(
+            go_left, jnp.take(left, nbase + jj), jnp.take(right, nbase + jj)
+        )
+        return jnp.where(j >= 0, nxt, j)
+
+    j = jax.lax.fori_loop(0, depth, body, j)
+    o_ref[...] = ~j
+
+
+@functools.partial(jax.jit, static_argnames=("depth", "block", "interpret"))
+def forest_sample_batched(
+    cdf: jax.Array,
+    table: jax.Array,
+    left: jax.Array,
+    right: jax.Array,
+    dist_id: jax.Array,
+    xi: jax.Array,
+    cell_first: jax.Array | None = None,
+    fallback: jax.Array | None = None,
+    depth: int = 40,
+    block: int = 2048,
+    interpret: bool = True,
+) -> jax.Array:
+    """Bulk sampling over B stacked forests: ``(dist_id, xi)`` pairs (Q,) ->
+    row-local interval indices (Q,) int32, one launch for the mixed batch.
+
+    Inputs are the stacked ``BatchedForest`` arrays (``cdf`` (B, n+1),
+    ``table`` (B, m), ``left``/``right`` (B, n), optionally ``cell_first``
+    (B, m+1) / ``fallback`` (B, m) for degenerate-cell pre-resolution —
+    required whenever any row flagged a cell). VMEM budget is the whole
+    stack (~B * n * 16B), which is exactly the pool's size-class regime:
+    many small distributions sharing one resident table."""
+    (Q,) = xi.shape
+    B, m = table.shape
+    n = left.shape[1]
+    fb = cell_first is not None and fallback is not None
+    Qp = (Q + block - 1) // block * block
+    xip = jnp.pad(xi, (0, Qp - Q))
+    didp = jnp.clip(jnp.pad(dist_id.astype(jnp.int32), (0, Qp - Q)), 0, B - 1)
+    full2 = lambda r, c: pl.BlockSpec((r, c), lambda i: (0, 0))
+    in_specs = [full2(B, n + 1), full2(B, m), full2(B, n), full2(B, n)]
+    operands = [cdf, table, left, right]
+    if fb:
+        in_specs += [full2(B, m + 1), full2(B, m)]
+        operands += [cell_first, fallback.astype(jnp.int32)]
+    in_specs += [
+        pl.BlockSpec((block,), lambda i: (i,)),
+        pl.BlockSpec((block,), lambda i: (i,)),
+    ]
+    operands += [didp, xip]
+    out = pl.pallas_call(
+        functools.partial(
+            _forest_batched_kernel, depth=depth, m=m, n=n, fb=fb
+        ),
+        grid=(Qp // block,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((Qp,), jnp.int32),
+        interpret=interpret,
+    )(*operands)
+    return out[:Q]
 
 
 @functools.partial(jax.jit, static_argnames=("depth", "block", "interpret"))

@@ -18,11 +18,20 @@ from .cdf_scan import cdf_scan as _cdf_scan
 from .forest_delta import forest_delta as _forest_delta
 from .forest_delta import forest_delta_update as _forest_delta_update
 from .forest_sample import forest_sample as _forest_sample
+from .forest_sample import forest_sample_batched as _forest_sample_batched
 from .sample_tiled import sample_rows as _sample_rows
 
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def use_pallas_default() -> bool:
+    """The repo-wide dispatch policy: Pallas kernels compile natively on TPU;
+    elsewhere the pure-jnp references are the same bits for a fraction of
+    the interpret-mode dispatch cost. Single-sourced so the dist and pool
+    layers cannot drift from each other."""
+    return jax.default_backend() == "tpu"
 
 
 def fused_cdf(x: jax.Array, softmax: bool = True, use_pallas: bool = True) -> jax.Array:
@@ -58,6 +67,34 @@ def forest_sample(forest: RadixForest, xi: jax.Array, use_pallas: bool = True) -
     return _forest_sample(
         forest.cdf, forest.table, forest.left, forest.right, xi, cf, fb,
         interpret=_interpret(),
+    )
+
+
+def forest_sample_batched(
+    forest, dist_id: jax.Array, xi: jax.Array, use_pallas: bool = True,
+    degenerate: bool | None = None,
+) -> jax.Array:
+    """Mixed-batch Algorithm 2 over B stacked forests (one launch).
+
+    ``forest`` is any object with the stacked ``BatchedForest`` fields
+    (``repro.pool.batched.BatchedForest``; duck-typed here so the kernel
+    layer never imports the pool layer). Same degenerate-cell policy as
+    :func:`forest_sample`: side tables ride along only when some row
+    actually flagged a cell. Callers that track flagged rows host-side
+    (``ForestPool``) pass ``degenerate`` explicitly and spare the serving
+    hot path a blocking device round-trip per drain."""
+    if degenerate is None:
+        degenerate = bool(jax.device_get(forest.fallback.any()))
+    cf = forest.cell_first if degenerate else None
+    fb = forest.fallback if degenerate else None
+    if not use_pallas:
+        return ref.ref_forest_sample_batched(
+            forest.cdf, forest.table, forest.left, forest.right,
+            dist_id, xi, cf, fb,
+        )
+    return _forest_sample_batched(
+        forest.cdf, forest.table, forest.left, forest.right, dist_id, xi,
+        cf, fb, interpret=_interpret(),
     )
 
 

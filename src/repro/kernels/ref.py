@@ -59,6 +59,42 @@ def ref_forest_sample(
     return ~jax.lax.fori_loop(0, depth, body, j)
 
 
+def ref_forest_sample_batched(
+    cdf, table, left, right, dist_id, xi, cell_first=None, fallback=None,
+    depth: int = 64,
+) -> jax.Array:
+    """Oracle for kernels.forest_sample.forest_sample_batched: lane q
+    descends distribution dist_id[q]'s row with 2-D gathers (same optional
+    degenerate-cell pre-resolution as the kernel)."""
+    B, m = table.shape
+    n = left.shape[1]
+    did = jnp.clip(dist_id.astype(jnp.int32), 0, B - 1)
+    g = jnp.clip(jnp.floor(xi * jnp.float32(m)).astype(jnp.int32), 0, m - 1)
+    j = table[did, g]
+
+    if cell_first is not None and fallback is not None:
+        flagged = fallback[did, g] & (j >= 0)
+        lo = cell_first[did, g]
+        hi = cell_first[did, g + 1]
+
+        def bisect_body(_, state):
+            lo, hi = state
+            mid = (lo + hi + 1) >> 1
+            ge = xi >= cdf[did, mid]
+            return jnp.where(ge, mid, lo), jnp.where(ge, hi, mid - 1)
+
+        lo, _ = jax.lax.fori_loop(0, 32, bisect_body, (lo, hi))
+        j = jnp.where(flagged, ~lo, j)
+
+    def body(_, j):
+        jj = jnp.clip(j, 0, n - 1)
+        go_left = xi < cdf[did, jj]
+        nxt = jnp.where(go_left, left[did, jj], right[did, jj])
+        return jnp.where(j >= 0, nxt, j)
+
+    return ~jax.lax.fori_loop(0, depth, body, j)
+
+
 def ref_forest_delta(data: jax.Array, m: int) -> jax.Array:
     """Oracle for kernels.forest_delta.forest_delta. Cells are clipped to
     [0, m-1] exactly like core.forest._cells, so the crossing mask is the

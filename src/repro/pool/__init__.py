@@ -1,0 +1,18 @@
+"""Batched radix-forest pools: fused multi-distribution construction,
+size-class arenas, and bulk mixed-batch sampling for multi-tenant serving."""
+from .arena import ForestPool, Handle
+from .batched import (
+    BatchedForest,
+    build_forest_batched,
+    build_forest_batched_from_cdf,
+    sample_forest_batched,
+)
+
+__all__ = [
+    "BatchedForest",
+    "ForestPool",
+    "Handle",
+    "build_forest_batched",
+    "build_forest_batched_from_cdf",
+    "sample_forest_batched",
+]

@@ -1,0 +1,343 @@
+"""Size-class forest arenas: many variable-n tenants, few compiled programs.
+
+The multi-tenant serving problem: thousands of clients each own a *small*
+categorical of a *different* size, churning (insert / re-weight / evict) at
+request rate. Naively that is one compiled build + one compiled sampler per
+distinct ``n`` — a recompile storm. :class:`ForestPool` packs tenants into
+**power-of-two size classes** (weights zero-padded to the class size, guide
+resolution fixed per class), so every tenant in a class shares the same
+stacked :class:`~repro.pool.batched.BatchedForest` arrays and the same
+handful of compiled programs: one fused batched build per (rows, size), one
+batched sampling launch per (size, batch) — regardless of how many tenants
+come and go.
+
+Slot lifecycle: :meth:`ForestPool.insert` hands out a stable
+:class:`Handle` (size class, row, true ``n``, version). Rows are recycled
+through a **free list**; every recycle bumps the row's **version counter**,
+so a stale handle (evicted tenant, reused slot) raises instead of silently
+sampling someone else's distribution. :meth:`ForestPool.update_weights`
+re-targets a tenant in place, routing the Algorithm-1 re-work through
+:mod:`repro.kernels.forest_delta`: a bit-identical CDF skips the rebuild
+entirely, otherwise the new separator distances feed a single-row rebuild
+scattered back into the stack.
+
+Zero-padding is sound by the paper's own semantics: padded intervals have
+zero width, so no uniform in [0, 1) ever resolves to one (boundary hits are
+measure-zero and clipped to the tenant's true range on the way out).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.cdf import (
+    build_cdf,
+    lower_bounds,
+    normalize_weights,
+    updated_weights,
+)
+from repro.core.forest import RadixForest, forest_from_cdf
+from repro.kernels import ops
+
+from .batched import BatchedForest, build_forest_batched
+
+
+class Handle(NamedTuple):
+    """Stable tenant reference: which class/row, how big, which lifetime."""
+
+    size_class: int  # padded n (power of two) — the class key
+    row: int         # row in the class's stacked arrays
+    n: int           # true (unpadded) distribution size
+    version: int     # row lifetime counter; mismatch => stale handle
+
+
+def _pow2_at_least(x: int, floor: int) -> int:
+    p = max(int(floor), 1)
+    while p < x:
+        p <<= 1
+    return p
+
+
+class _SizeClass:
+    """One stacked arena: all tenants padded to ``size`` leaves."""
+
+    def __init__(self, size: int, m: int, init_rows: int):
+        self.size = size
+        self.m = m
+        self.rows = init_rows
+        self.forest: BatchedForest | None = None  # allocated on first build
+        self.n_true = np.zeros(init_rows, np.int64)
+        self.versions = np.zeros(init_rows, np.int64)
+        self.free: list[int] = list(range(init_rows - 1, -1, -1))
+        self.raw: dict[int, np.ndarray] = {}  # row -> float64 raw weights
+        self.degenerate_rows: set[int] = set()  # rows with flagged cells
+        self.builds = 0
+        self.delta_rebuilds = 0
+        self.delta_skips = 0
+        self.grows = 0
+
+    @property
+    def occupied(self) -> int:
+        return self.rows - len(self.free)
+
+
+def _zeros_forest(rows: int, n: int, m: int) -> BatchedForest:
+    """Placeholder stack for never-occupied rows (no draw ever routes to a
+    row without a live handle, so content only needs valid shapes/dtypes)."""
+    return BatchedForest(
+        cdf=jnp.zeros((rows, n + 1), jnp.float32),
+        table=jnp.zeros((rows, m), jnp.int32),
+        left=jnp.zeros((rows, n), jnp.int32),
+        right=jnp.zeros((rows, n), jnp.int32),
+        cell_first=jnp.zeros((rows, m + 1), jnp.int32),
+        fallback=jnp.zeros((rows, m), jnp.bool_),
+    )
+
+
+class ForestPool:
+    """A batched radix-forest pool over power-of-two size-class arenas.
+
+    Parameters: ``min_class`` floors the smallest padded size (tiny tenants
+    share one class instead of one class per n); ``m`` pins one guide
+    resolution for every class (default: each class uses ``m = size``, the
+    repo-wide guide density); ``init_rows`` is the starting arena height,
+    doubled on demand.
+    """
+
+    def __init__(self, min_class: int = 8, m: int | None = None,
+                 init_rows: int = 4):
+        if min_class < 1 or (min_class & (min_class - 1)):
+            raise ValueError("min_class must be a positive power of two")
+        self.min_class = min_class
+        self._m = m
+        self.init_rows = max(int(init_rows), 1)
+        self.classes: dict[int, _SizeClass] = {}
+
+    # ------------------------------------------------------------- plumbing
+
+    def _class_for(self, n: int) -> _SizeClass:
+        size = _pow2_at_least(n, self.min_class)
+        sc = self.classes.get(size)
+        if sc is None:
+            sc = _SizeClass(size, self._m or size, self.init_rows)
+            self.classes[size] = sc
+        return sc
+
+    def _check(self, h: Handle) -> _SizeClass:
+        # O(1): ``raw`` holds exactly the occupied rows (insert sets, evict
+        # pops), and evict bumps the version BEFORE freeing, so a recycled
+        # row can never satisfy a stale handle's version.
+        sc = self.classes.get(h.size_class)
+        if (
+            sc is None
+            or h.row not in sc.raw
+            or sc.versions[h.row] != h.version
+        ):
+            raise ValueError(f"stale or evicted handle: {h}")
+        return sc
+
+    def _grow(self, sc: _SizeClass) -> None:
+        extra = sc.rows
+        sc.free.extend(range(sc.rows + extra - 1, sc.rows - 1, -1))
+        pad = _zeros_forest(extra, sc.size, sc.m)
+        if sc.forest is not None:
+            sc.forest = BatchedForest(
+                *(jnp.concatenate([a, b]) for a, b in zip(sc.forest, pad))
+            )
+        sc.n_true = np.concatenate([sc.n_true, np.zeros(extra, np.int64)])
+        sc.versions = np.concatenate([sc.versions, np.zeros(extra, np.int64)])
+        sc.rows += extra
+        sc.grows += 1
+
+    def _take_row(self, sc: _SizeClass) -> int:
+        if not sc.free:
+            self._grow(sc)
+        return sc.free.pop()
+
+    def _pad(self, w: np.ndarray, size: int) -> np.ndarray:
+        return np.pad(w.astype(np.float32), (0, size - len(w)))
+
+    def _write_rows(self, sc: _SizeClass, rows: list[int],
+                    built: BatchedForest) -> None:
+        if sc.forest is None:
+            sc.forest = _zeros_forest(sc.rows, sc.size, sc.m)
+        idx = jnp.asarray(rows, jnp.int32)
+        sc.forest = BatchedForest(
+            *(a.at[idx].set(b) for a, b in zip(sc.forest, built))
+        )
+
+    # ------------------------------------------------------------ lifecycle
+
+    def insert(self, weights) -> Handle:
+        """Admit one tenant; see :meth:`insert_many` for the fused path."""
+        return self.insert_many([weights])[0]
+
+    def insert_many(self, weights_list) -> list[Handle]:
+        """Admit a group of tenants, fusing each size class's builds into
+        ONE batched launch (``build_forest_batched`` over the stacked padded
+        rows) — the build-B-at-once path the pool exists for. The group is
+        padded to a power-of-two batch so heterogeneous admission waves
+        reuse a logarithmic number of compiled build programs."""
+        raws = [np.asarray(w, np.float64) for w in weights_list]
+        norms = [normalize_weights(r) for r in raws]
+        handles: list[Handle | None] = [None] * len(raws)
+        by_class: dict[int, list[int]] = {}
+        for i, w in enumerate(norms):
+            sc = self._class_for(len(w))
+            by_class.setdefault(sc.size, []).append(i)
+        for size, idxs in by_class.items():
+            sc = self.classes[size]
+            rows = [self._take_row(sc) for _ in idxs]
+            stack = np.stack([self._pad(norms[i], size) for i in idxs])
+            bpad = _pow2_at_least(len(idxs), 1)
+            if bpad != len(idxs):  # dummy rows keep the program count low
+                fill = np.full((bpad - len(idxs), size), 1.0, np.float32)
+                stack = np.concatenate([stack, fill])
+            built = build_forest_batched(jnp.asarray(stack), sc.m)
+            built = BatchedForest(*(a[: len(idxs)] for a in built))
+            self._write_rows(sc, rows, built)
+            sc.builds += len(idxs)
+            # one sync per admission wave keeps the drain path sync-free
+            flagged = np.asarray(built.fallback.any(axis=1))
+            for (i, row), flag in zip(zip(idxs, rows), flagged):
+                sc.n_true[row] = len(norms[i])
+                sc.raw[row] = raws[i]
+                if flag:
+                    sc.degenerate_rows.add(row)
+                handles[i] = Handle(size, row, len(norms[i]), int(sc.versions[row]))
+        return handles  # type: ignore[return-value]
+
+    def update_weights(self, handle: Handle, weights=None, *, delta=None) -> None:
+        """In-place re-target of one tenant (full weights or a delta on the
+        raw weights). The Algorithm-1 re-work routes through
+        :func:`repro.kernels.ops.forest_delta_update`: bit-unchanged CDFs
+        skip the rebuild; otherwise the returned separator distances feed a
+        single-row rebuild. The handle stays valid (versions track slot
+        reuse, not content)."""
+        sc = self._check(handle)
+        for name, arr in (("weights", weights), ("delta", delta)):
+            if arr is not None and np.asarray(arr).shape != (handle.n,):
+                raise ValueError(
+                    f"update keeps n fixed: handle has n={handle.n}, got "
+                    f"{name} of shape {np.asarray(arr).shape} (scalars and "
+                    f"padded-size arrays would silently broadcast)"
+                )
+        raw, w = updated_weights(sc.raw[handle.row], weights, delta=delta)
+        sc.raw[handle.row] = raw
+        new_cdf = build_cdf(jnp.asarray(self._pad(w, sc.size)))
+        old_cdf = sc.forest.cdf[handle.row]
+        # Skip keyed on raw CDF bits (the dist-layer policy): the clamped
+        # lower bounds alone could hide a cdf move inside the last-ulp-
+        # below-1 region and leave a stale row serving.
+        if np.array_equal(
+            np.asarray(old_cdf).view(np.uint32),
+            np.asarray(new_cdf).view(np.uint32),
+        ):
+            sc.delta_skips += 1
+            return
+        d_new, _ = ops.forest_delta_update(
+            lower_bounds(old_cdf), lower_bounds(new_cdf), sc.m,
+            use_pallas=ops.use_pallas_default(),
+        )
+        built = _rebuild_row(new_cdf, d_new, sc.m)
+        self._write_rows(sc, [handle.row], BatchedForest(
+            *(a[None] for a in built)
+        ))
+        if bool(jax.device_get(built.fallback.any())):
+            sc.degenerate_rows.add(handle.row)
+        else:
+            sc.degenerate_rows.discard(handle.row)
+        sc.delta_rebuilds += 1
+
+    def evict(self, handle: Handle) -> None:
+        """Release the tenant's row back to the class free list. The version
+        bump invalidates every outstanding handle to the row. The row's
+        fallback bits are cleared so a dead degenerate (tied-weight) tenant
+        stops forcing the side-table pre-resolution path on the whole
+        class's future drains (``ops.forest_sample_batched`` keys that path
+        off ``fallback.any()`` over the stack)."""
+        sc = self._check(handle)
+        sc.versions[handle.row] += 1
+        sc.n_true[handle.row] = 0
+        sc.raw.pop(handle.row, None)
+        sc.free.append(handle.row)
+        if handle.row in sc.degenerate_rows:
+            sc.degenerate_rows.discard(handle.row)
+            sc.forest = sc.forest._replace(
+                fallback=sc.forest.fallback.at[handle.row].set(False)
+            )
+
+    # ------------------------------------------------------------- sampling
+
+    def sample(self, handles, xi, use_pallas: bool = True) -> np.ndarray:
+        """Bulk mixed-batch drain: draw q resolves ``xi[q]`` in
+        ``handles[q]``'s distribution. One ``forest_sample_batched`` launch
+        per touched size class (the whole point: a thousand tenants over 3
+        classes is 3 launches, not 1000). Results are clipped to each
+        tenant's true range (zero-width padded intervals are measure-zero
+        boundary hits). Returns (Q,) int32 row-local interval indices."""
+        xi = np.asarray(xi, np.float32)
+        if len(handles) != len(xi):
+            raise ValueError("handles and xi must align elementwise")
+        out = np.empty(len(xi), np.int32)
+        for h in set(handles):  # validate each distinct handle once
+            self._check(h)
+        by_class: dict[int, list[int]] = {}
+        for q, h in enumerate(handles):
+            by_class.setdefault(h.size_class, []).append(q)
+        for size, qs in by_class.items():
+            sc = self.classes[size]
+            did = np.asarray([handles[q].row for q in qs], np.int32)
+            u = xi[qs]
+            qpad = _pow2_at_least(len(qs), 64)  # bucket the drain size too
+            didp = np.pad(did, (0, qpad - len(qs)))
+            up = np.pad(u, (0, qpad - len(qs)))
+            idx = np.asarray(ops.forest_sample_batched(
+                sc.forest, jnp.asarray(didp), jnp.asarray(up),
+                use_pallas=use_pallas,
+                # host-side flag bookkeeping spares the drain a device sync
+                degenerate=bool(sc.degenerate_rows),
+            ))[: len(qs)]
+            hi = np.asarray([handles[q].n - 1 for q in qs], np.int64)
+            out[qs] = np.minimum(idx, hi).astype(np.int32)
+        return out
+
+    # ---------------------------------------------------------- inspection
+
+    def forest_row(self, handle: Handle) -> RadixForest:
+        """The tenant's padded forest as a single-distribution view
+        (differential tests; serving should drain through :meth:`sample`)."""
+        sc = self._check(handle)
+        return sc.forest.row(handle.row)
+
+    def weights(self, handle: Handle) -> np.ndarray:
+        """Normalized float32 weights currently served for the tenant."""
+        sc = self._check(handle)
+        return normalize_weights(sc.raw[handle.row])
+
+    def stats(self) -> dict:
+        """Per-class occupancy/build counters + pool-level program count."""
+        per = {
+            size: dict(
+                m=sc.m, rows=sc.rows, occupied=sc.occupied,
+                free=len(sc.free), builds=sc.builds,
+                delta_rebuilds=sc.delta_rebuilds,
+                delta_skips=sc.delta_skips, grows=sc.grows,
+            )
+            for size, sc in sorted(self.classes.items())
+        }
+        return dict(
+            classes=per,
+            tenants=sum(sc.occupied for sc in self.classes.values()),
+        )
+
+
+@functools.partial(jax.jit, static_argnames=("m",))
+def _rebuild_row(cdf: jax.Array, d: jax.Array, m: int) -> RadixForest:
+    """Jitted single-row rebuild from a CDF + precomputed distances (one
+    compiled program per size class, shared by every tenant update)."""
+    return forest_from_cdf(cdf, m, d=d)

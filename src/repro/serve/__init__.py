@@ -1,4 +1,16 @@
 from .engine import Request, ServeEngine
-from .sampler import QmcStreams, TokenSampler
+from .sampler import (
+    ForestSampler,
+    PooledForestSampler,
+    QmcStreams,
+    TokenSampler,
+)
 
-__all__ = ["Request", "ServeEngine", "QmcStreams", "TokenSampler"]
+__all__ = [
+    "Request",
+    "ServeEngine",
+    "ForestSampler",
+    "PooledForestSampler",
+    "QmcStreams",
+    "TokenSampler",
+]

@@ -6,6 +6,16 @@ decode step. Each decode step runs the whole slot pool through
 ``decode_step`` + the radix-CDF sampler; finished slots (EOS/max-len) are
 recycled. KV caches live per-slot and are scatter-updated in the batch
 dimension — the CPU-scale stand-in for paged attention.
+
+Multi-tenant path: a request may carry its own static categorical
+(``Request.prior`` — draft prior, per-client mixture, per-cell density).
+Such requests bypass the model entirely: on admit the prior is inserted
+into a :class:`~repro.serve.sampler.PooledForestSampler`'s size-class
+arena, every step drains ALL prior-backed slots with one batched kernel
+launch per touched size class, and retirement evicts the tenant (slot
+handles are versioned, so churn can never sample a stale distribution).
+With ``params=None`` the engine serves pure categorical traffic — the
+paper's millions-of-users scenario with no LM in the loop.
 """
 from __future__ import annotations
 
@@ -17,10 +27,9 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.models import decode_step, init_cache, prefill
 from repro.models.config import ModelConfig
 
-from .sampler import TokenSampler
+from .sampler import PooledForestSampler, TokenSampler
 
 
 @dataclasses.dataclass
@@ -29,33 +38,72 @@ class Request:
     prompt: np.ndarray
     max_new: int = 32
     eos: int | None = None
+    prior: np.ndarray | None = None  # per-request categorical (pool path)
     out: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
 
 
 class ServeEngine:
-    def __init__(self, params: Any, cfg: ModelConfig, n_slots: int = 8,
-                 max_seq: int = 512, sampler: TokenSampler | None = None):
+    def __init__(self, params: Any, cfg: ModelConfig | None, n_slots: int = 8,
+                 max_seq: int = 512, sampler: TokenSampler | None = None,
+                 prior_sampler: PooledForestSampler | None = None):
         self.params = params
         self.cfg = cfg
         self.n_slots = n_slots
         self.max_seq = max_seq
         self.sampler = sampler or TokenSampler(n_slots=n_slots, use_pallas=False)
+        self.prior_sampler = prior_sampler
+        self.prior_handles: dict[int, Any] = {}  # slot -> pool Handle
         self.queue: deque[Request] = deque()
         self.slots: list[Request | None] = [None] * n_slots
-        self.cache = init_cache(cfg, n_slots, max_seq)
+        if params is not None:
+            from repro.models import init_cache  # lazy: priors-only engines
+                                                 # never touch the model layer
+            self.cache = init_cache(cfg, n_slots, max_seq)
+        else:
+            self.cache = None
         self.pos = np.zeros(n_slots, np.int32)
         self.last_tok = np.zeros(n_slots, np.int32)
         self.steps = 0
 
     def submit(self, req: Request) -> None:
+        if req.prior is None and self.params is None:
+            raise ValueError(
+                "engine has no model (params=None); submit prior-backed "
+                "requests only"
+            )
         self.queue.append(req)
 
+    def _admit_priors(self, admitted: list[tuple[int, Request]]) -> None:
+        """Prior-backed admission wave: no prefill, no KV — the whole wave
+        joins the pool through the fused batched builder (one build launch
+        per touched size class) and draws its first tokens in one batched
+        drain."""
+        if self.prior_sampler is None:
+            self.prior_sampler = PooledForestSampler(
+                n_slots=self.n_slots, use_pallas=False
+            )
+        slots = np.asarray([s for s, _ in admitted])
+        hs = self.prior_sampler.add_many([r.prior for _, r in admitted])
+        for (s, _), h in zip(admitted, hs):
+            self.prior_handles[s] = h
+        toks = self.prior_sampler.sample(hs, slots)
+        for (s, req), tok in zip(admitted, toks):
+            self.pos[s] = 0
+            self.last_tok[s] = int(tok)
+            req.out.append(int(tok))
+
     def _admit(self) -> None:
+        priors: list[tuple[int, Request]] = []
         for s in range(self.n_slots):
             if self.slots[s] is None and self.queue:
                 req = self.queue.popleft()
                 self.slots[s] = req
+                if req.prior is not None:
+                    priors.append((s, req))
+                    continue
+                from repro.models import prefill
+
                 # prefill this request alone, then splice its cache into the
                 # slot position of the batched cache
                 batch = {"tokens": jnp.asarray(req.prompt[None, :], jnp.int32)}
@@ -74,6 +122,8 @@ class ServeEngine:
                 self.pos[s] = len(req.prompt)
                 self.last_tok[s] = tok
                 req.out.append(int(tok))
+        if priors:
+            self._admit_priors(priors)
 
     def _retire(self) -> None:
         for s, req in enumerate(self.slots):
@@ -82,33 +132,52 @@ class ServeEngine:
             if (
                 len(req.out) >= req.max_new
                 or (req.eos is not None and req.out and req.out[-1] == req.eos)
-                or self.pos[s] >= self.max_seq - 1
+                # max_seq is a KV budget; prior-backed slots hold no KV
+                or (s not in self.prior_handles
+                    and self.pos[s] >= self.max_seq - 1)
             ):
                 req.done = True
                 self.slots[s] = None
+                h = self.prior_handles.pop(s, None)
+                if h is not None:
+                    self.prior_sampler.remove(h)
 
     def step(self) -> None:
         self._admit()
         active = [s for s, r in enumerate(self.slots) if r is not None]
         if not active:
             return
-        # attention_decode scatters at per-row pos, so idle slots simply
-        # overwrite their own stale cell; only active slots are read out.
-        logits, new_cache = decode_step(
-            self.params,
-            self.cfg,
-            self.cache,
-            jnp.asarray(self.last_tok),
-            jnp.asarray(self.pos),
-        )
-        self.cache = new_cache
-        act = np.asarray(active)
-        toks = self.sampler.sample(logits[act], act)
-        for i, s in enumerate(active):
-            tok = int(toks[i])
-            self.slots[s].out.append(tok)
-            self.last_tok[s] = tok
-            self.pos[s] += 1
+        model_slots = [s for s in active if s not in self.prior_handles]
+        prior_slots = [s for s in active if s in self.prior_handles]
+        if model_slots:
+            from repro.models import decode_step
+
+            # attention_decode scatters at per-row pos, so idle slots simply
+            # overwrite their own stale cell; only active slots are read out.
+            logits, new_cache = decode_step(
+                self.params,
+                self.cfg,
+                self.cache,
+                jnp.asarray(self.last_tok),
+                jnp.asarray(self.pos),
+            )
+            self.cache = new_cache
+            act = np.asarray(model_slots)
+            toks = self.sampler.sample(logits[act], act)
+            for i, s in enumerate(model_slots):
+                tok = int(toks[i])
+                self.slots[s].out.append(tok)
+                self.last_tok[s] = tok
+                self.pos[s] += 1
+        if prior_slots:
+            # the batched drain: every prior-backed slot in one pool call
+            hs = [self.prior_handles[s] for s in prior_slots]
+            toks = self.prior_sampler.sample(hs, np.asarray(prior_slots))
+            for i, s in enumerate(prior_slots):
+                tok = int(toks[i])
+                self.slots[s].out.append(tok)
+                self.last_tok[s] = tok
+                self.pos[s] += 1
         self._retire()
         self.steps += 1
 

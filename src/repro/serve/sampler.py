@@ -100,6 +100,51 @@ class ForestSampler:
         return np.asarray(sample_forest(self.forest, xi))
 
 
+class PooledForestSampler:
+    """Multi-tenant serving sampler: thousands of per-request categoricals
+    (draft priors, per-client mixtures, per-cell densities) in ONE
+    :class:`repro.pool.ForestPool`, drained in bulk.
+
+    The serving-shaped complement of :class:`ForestSampler` (one shared
+    distribution, many draws): here every request owns its *own* small
+    distribution. ``add`` admits a tenant and returns its stable pool
+    :class:`~repro.pool.Handle`; ``sample`` resolves one QMC draw per slot
+    against that slot's distribution with one batched kernel launch per
+    touched size class (the batched drain), instead of a launch per tenant.
+    ``update``/``remove`` re-target and retire tenants in place; slot QMC
+    streams keep their counters across tenant churn, so stratification
+    survives distribution swaps exactly as in :class:`ForestSampler`."""
+
+    def __init__(self, n_slots: int = 64, seed: int = 0, min_class: int = 8,
+                 m: int | None = None, use_pallas: bool = True):
+        from repro.pool import ForestPool  # lazy: serve stays importable
+
+        self.pool = ForestPool(min_class=min_class, m=m)
+        self.streams = QmcStreams(n_slots, seed)
+        self.use_pallas = use_pallas
+
+    def add(self, weights):
+        """Admit one tenant; returns its pool handle."""
+        return self.pool.insert(weights)
+
+    def add_many(self, weights_list):
+        """Admit an admission wave through the fused batched builder."""
+        return self.pool.insert_many(weights_list)
+
+    def update(self, handle, weights=None, *, delta=None) -> None:
+        self.pool.update_weights(handle, weights, delta=delta)
+
+    def remove(self, handle) -> None:
+        self.pool.evict(handle)
+
+    def sample(self, handles, slots: np.ndarray) -> np.ndarray:
+        """One draw per slot from that slot's tenant distribution — the
+        batched drain. ``handles[i]`` pairs with ``slots[i]``'s QMC
+        stream."""
+        xi = self.streams.next(np.asarray(slots))
+        return self.pool.sample(handles, xi, use_pallas=self.use_pallas)
+
+
 class TokenSampler:
     def __init__(self, mode: str = "inverse_qmc", n_slots: int = 64,
                  temperature: float = 1.0, seed: int = 0, use_pallas: bool = True):

@@ -70,6 +70,22 @@ def test_construction_delta_bench_runs():
     assert all(r["update_us"] > 0 and r["full_us"] > 0 for r in rows)
 
 
+def test_pool_construction_bench_runs():
+    from benchmarks.pool import run_construction
+
+    rows = run_construction(batches=(4,), n=256)
+    assert rows and rows[0]["B"] == 4
+    assert rows[0]["batched_us"] > 0 and rows[0]["loop_us"] > 0
+
+
+def test_pool_sampling_bench_runs():
+    from benchmarks.pool import run_sampling
+
+    rows = run_sampling(tenants=8, draws=1 << 10)
+    assert {r["path"] for r in rows} == {"pool_ref", "pool_pallas"}
+    assert all(r["us"] > 0 and r["classes"] >= 1 for r in rows)
+
+
 def test_throughput_sharded_bench_runs():
     from benchmarks.sampling_throughput import run_sharded
 

@@ -105,6 +105,33 @@ def test_serve_engine_isolation_under_load(tiny_lm):
     assert outs[0] == outs[1], outs
 
 
+def test_serve_engine_mixed_model_and_prior_traffic(tiny_lm):
+    """Model-backed and prior-backed (pool) requests co-batch in one engine:
+    LM requests decode normally while prior tenants drain through the
+    batched pool path, and retirement evicts every tenant."""
+    cfg, params = tiny_lm
+    rng = np.random.default_rng(3)
+    eng = ServeEngine(params, cfg, n_slots=4, max_seq=64,
+                      sampler=TokenSampler(n_slots=4, use_pallas=False))
+    lm_reqs = [
+        Request(rid=i, prompt=rng.integers(0, cfg.vocab, size=5), max_new=5)
+        for i in range(2)
+    ]
+    prior_reqs = [
+        Request(rid=10 + i, prompt=np.zeros(1, np.int64), max_new=5,
+                prior=rng.random(12) + 1e-3)
+        for i in range(3)
+    ]
+    for r in lm_reqs + prior_reqs:
+        eng.submit(r)
+    eng.run(max_steps=100)
+    for r in lm_reqs:
+        assert r.done and all(0 <= t < cfg.vocab for t in r.out)
+    for r in prior_reqs:
+        assert r.done and all(0 <= t < 12 for t in r.out)
+    assert eng.prior_sampler.pool.stats()["tenants"] == 0
+
+
 def test_token_sampler_modes_agree_on_peaked_logits(tiny_lm):
     cfg, _ = tiny_lm
     logits = np.full((3, cfg.vocab), -20.0, np.float32)

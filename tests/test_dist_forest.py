@@ -218,7 +218,8 @@ def test_delta_update_inprocess():
         sf0, jnp.asarray(w1), mesh=mesh, with_stats=True
     )
     ref = DF.build_forest_sharded(
-        jnp.asarray(w1), m, mesh=mesh, partition=np.asarray(sf0.cell_bounds)
+        jnp.asarray(w1), m, mesh=mesh, partition=np.asarray(sf0.cell_bounds),
+        capacity=upd.capacity,  # hysteresis may retain the larger window
     )
     _assert_sharded_equal(upd, ref)
     _assert_gather_bit_identical(w1, m, upd)
@@ -230,7 +231,8 @@ def test_delta_update_inprocess():
     w2 = rng.random(n).astype(np.float32) + np.float32(1e-3)
     upd2 = DF.update_forest_sharded(sf0, jnp.asarray(w2), mesh=mesh)
     ref2 = DF.build_forest_sharded(
-        jnp.asarray(w2), m, mesh=mesh, partition=np.asarray(sf0.cell_bounds)
+        jnp.asarray(w2), m, mesh=mesh, partition=np.asarray(sf0.cell_bounds),
+        capacity=upd2.capacity,
     )
     _assert_sharded_equal(upd2, ref2)
     _assert_gather_bit_identical(w2, m, upd2)
@@ -257,6 +259,60 @@ def test_delta_update_weights_delta_form():
     _assert_sharded_equal(a, b)
     with pytest.raises(ValueError):
         DF.update_forest_sharded(sf0, weights_delta=delta, mesh=mesh)
+
+
+def test_capacity_hysteresis_under_alternating_stream():
+    """The ROADMAP's adversarial stream: weights alternating between a
+    concentrated distribution (big max-shard occupancy) and a spread one
+    (small occupancy) used to re-plan the window capacity across a granule
+    boundary on EVERY update, recompiling the windowed build each time.
+    With hysteresis the capacity sticks at the high-water mark: no update
+    recompiles (`_windowed_builder` cache misses stay flat), the kept
+    capacity is reported in stats, and every step stays bit-identical to
+    the single-device build."""
+    mesh = _mesh()
+    D = int(mesh.shape["data"])
+    rng = np.random.default_rng(31)
+    n, m = 1024, 64
+    # concentrated: most leaves land in the first shard's cells
+    w_hi = np.full(n, 1e-6, np.float32)
+    w_hi[: n // 8] = 1.0
+    # spread: every cell gets a similar leaf count
+    w_lo = rng.random(n).astype(np.float32) + np.float32(0.5)
+    sf = DF.build_forest_sharded(jnp.asarray(w_hi), m, mesh=mesh)
+    cap0 = sf.capacity
+    misses0 = DF._windowed_builder.cache_info().misses
+    for step, w in enumerate([w_lo, w_hi, w_lo, w_hi, w_lo]):
+        sf, stats = DF.update_forest_sharded(
+            sf, jnp.asarray(w), mesh=mesh, with_stats=True
+        )
+        assert sf.capacity == cap0, (step, sf.capacity, cap0)
+        assert stats["capacity"] == cap0
+        _assert_gather_bit_identical(w, m, sf)
+    assert DF._windowed_builder.cache_info().misses == misses0
+    if D > 1:
+        # the stream is genuinely adversarial: without hysteresis the
+        # spread plan demands a (much) smaller window than the high-water
+        # capacity kept here
+        fresh = DF.build_forest_sharded(jnp.asarray(w_lo), m, mesh=mesh)
+        assert fresh.capacity < cap0
+
+
+def test_explicit_capacity_contract():
+    """capacity= pins the static window (rounded plans reuse programs);
+    too-small capacities fail loudly instead of corrupting windows."""
+    mesh = _mesh()
+    w = np.random.default_rng(33).random(512).astype(np.float32) + 1e-3
+    sf = DF.build_forest_sharded(jnp.asarray(w), 64, mesh=mesh)
+    big = DF.build_forest_sharded(jnp.asarray(w), 64, mesh=mesh,
+                                  capacity=sf.n)
+    assert big.capacity == sf.n
+    _assert_gather_bit_identical(w, 64, big)
+    max_count = int(np.asarray(sf.window_count).max())
+    if max_count > 1:
+        with pytest.raises(ValueError):
+            DF.build_forest_sharded(jnp.asarray(w), 64, mesh=mesh,
+                                    capacity=max_count - 1)
 
 
 def test_forest_sampler_sharded_serve_path():
@@ -568,7 +624,8 @@ def test_delta_update_matrix_8dev():
             upd, st = DF.update_forest_sharded(
                 sf0, jnp.asarray(w1), mesh=mesh, with_stats=True)
             ref = DF.build_forest_sharded(
-                jnp.asarray(w1), m, mesh=mesh, partition=part)
+                jnp.asarray(w1), m, mesh=mesh, partition=part,
+                capacity=upd.capacity)
             assert_sharded_equal(upd, ref, ("sparse", rebalance))
             assert_single_device(w1, m, upd, ("sparse", rebalance))
             if not st["plan_changed"]:
@@ -580,7 +637,8 @@ def test_delta_update_matrix_8dev():
             upd2, st2 = DF.update_forest_sharded(
                 sf0, jnp.asarray(w2), mesh=mesh, with_stats=True)
             ref2 = DF.build_forest_sharded(
-                jnp.asarray(w2), m, mesh=mesh, partition=part)
+                jnp.asarray(w2), m, mesh=mesh, partition=part,
+                capacity=upd2.capacity)
             assert_sharded_equal(upd2, ref2, ("full", rebalance))
             assert_single_device(w2, m, upd2, ("full", rebalance))
             assert st2["rebuilt"]

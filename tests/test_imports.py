@@ -33,6 +33,10 @@ MODULES = _modules()
 
 def test_module_list_is_nonempty():
     assert "repro.dist.sharding" in MODULES and len(MODULES) > 40
+    # the pool subsystem is part of the per-module import gate
+    assert {"repro.pool", "repro.pool.arena", "repro.pool.batched"} <= set(
+        MODULES
+    )
 
 
 @pytest.mark.parametrize("mod", MODULES)

@@ -1,0 +1,432 @@
+"""Differential + property suite for ``repro.pool``.
+
+The contracts under test (module docstrings of ``repro.pool.batched`` /
+``repro.pool.arena``):
+
+* the fused batched builder is **bit-identical**, row for row, to B
+  independent ``core.build_forest`` calls (property-tested across weight
+  families x ragged sizes, real hypothesis or the seeded stub);
+* ``forest_sample_batched`` (Pallas kernel AND jnp oracle) agrees
+  **elementwise** with the per-distribution reference across mixed size
+  classes, including degenerate (tied-weight) rows — also under 8 fake
+  devices (slow lane);
+* ``ForestPool`` slot handles are stable until evicted: free-list reuse
+  bumps version counters, stale handles raise, in-place weight updates
+  keep the handle and reproduce a fresh build bit-for-bit, and mixed-batch
+  draws follow each tenant's own distribution (chi-square GOF).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import hypothesis
+import hypothesis.strategies as st
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import build_forest, forest_to_numpy, validate_forest
+from repro.core.cdf import normalize_weights
+from repro.kernels import ops, ref
+from repro.pool import ForestPool, build_forest_batched
+
+_KEYS = ("cdf", "table", "left", "right", "cell_first", "fallback")
+
+settings = hypothesis.settings(max_examples=15, deadline=None)
+
+_FAMILIES = ("uniform", "powerlaw", "ties", "zeros", "spike")
+
+
+def _family_weights(kind: str, n: int, rng) -> np.ndarray:
+    if kind == "uniform":
+        return rng.random(n).astype(np.float32) + np.float32(1e-3)
+    if kind == "powerlaw":
+        return (rng.random(n).astype(np.float32) ** 8) + np.float32(1e-9)
+    if kind == "ties":
+        base = rng.random(max(n // 4, 1)).astype(np.float32) + np.float32(1e-3)
+        return base[rng.integers(0, len(base), n)]
+    if kind == "zeros":
+        w = rng.random(n).astype(np.float32)
+        w[rng.random(n) < 0.5] = 0.0
+        w[rng.integers(0, n)] = 1.0
+        return w
+    w = np.full(n, 1e-7, np.float32)
+    w[rng.integers(0, n)] = 1.0
+    return w
+
+
+def _assert_rows_match_single_builds(bf, W, m):
+    for b in range(W.shape[0]):
+        want = forest_to_numpy(build_forest(jnp.asarray(W[b]), m))
+        for k in _KEYS:
+            got = np.asarray(getattr(bf, k)[b])
+            assert np.array_equal(got, want[k]), (b, k)
+
+
+# -------------------------------------------------------- batched bit-identity
+
+
+@settings
+@hypothesis.given(
+    kind=st.sampled_from(_FAMILIES),
+    n=st.integers(min_value=1, max_value=160),
+    B=st.integers(min_value=1, max_value=5),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_batched_build_bit_identity_property(kind, n, B, seed):
+    """Every row of the fused vmapped build == its own single build,
+    bit for bit, across weight families and sizes."""
+    rng = np.random.default_rng(seed)
+    m = max(n, 4)
+    W = np.stack([_family_weights(kind, n, rng) for _ in range(B)])
+    W = np.stack([normalize_weights(w) for w in W])
+    bf = build_forest_batched(jnp.asarray(W), m)
+    assert bf.batch == B and bf.n == n and bf.m == m
+    _assert_rows_match_single_builds(bf, W, m)
+
+
+@settings
+@hypothesis.given(
+    sizes=st.lists(st.integers(min_value=1, max_value=120),
+                   min_size=1, max_size=6),
+    kind=st.sampled_from(_FAMILIES),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_pool_ragged_insert_bit_identity(sizes, kind, seed):
+    """Ragged tenants zero-pad into their size class; every occupied row is
+    bit-identical to a standalone build of the padded weights, and the row
+    validates as a well-formed forest."""
+    rng = np.random.default_rng(seed)
+    pool = ForestPool()
+    tenants = [_family_weights(kind, s, rng) for s in sizes]
+    handles = pool.insert_many(tenants)
+    for h, w in zip(handles, tenants):
+        assert h.size_class >= max(len(w), pool.min_class)
+        wn = normalize_weights(np.asarray(w, np.float64))
+        padded = np.pad(wn, (0, h.size_class - len(wn)))
+        sc = pool.classes[h.size_class]
+        want = forest_to_numpy(build_forest(jnp.asarray(padded), sc.m))
+        got = forest_to_numpy(pool.forest_row(h))
+        for k in _KEYS:
+            assert np.array_equal(got[k], want[k]), (h, k)
+    validate_forest(pool.forest_row(handles[0]))
+
+
+# ------------------------------------------------- batched sampling kernel
+
+
+@pytest.mark.parametrize("B,n,m", [(1, 8, 8), (5, 64, 32), (3, 300, 300)])
+def test_forest_sample_batched_matches_per_distribution(B, n, m):
+    """Kernel (interpret) == jnp oracle == per-distribution forest_sample,
+    elementwise, on a mixed (dist_id, uniform) batch that includes a
+    degenerate tied-weight row (fallback side-table path)."""
+    rng = np.random.default_rng(B * n + m)
+    W = np.stack([
+        normalize_weights(_family_weights("powerlaw", n, rng))
+        for _ in range(B)
+    ])
+    if B > 1 and n >= 4:  # force one degenerate row: exact ties chain deep
+        w = np.zeros(n, np.float32)
+        w[n // 2] = 1.0
+        W[B - 1] = w
+    bf = build_forest_batched(jnp.asarray(W), m)
+    Q = 2048
+    did = jnp.asarray(rng.integers(0, B, Q), jnp.int32)
+    xi = jnp.asarray(rng.random(Q), jnp.float32)
+    got_kernel = np.asarray(ops.forest_sample_batched(bf, did, xi,
+                                                      use_pallas=True))
+    got_ref = np.asarray(ops.forest_sample_batched(bf, did, xi,
+                                                   use_pallas=False))
+    want = np.empty(Q, np.int32)
+    for b in range(B):
+        sel = np.flatnonzero(np.asarray(did) == b)
+        want[sel] = np.asarray(ops.forest_sample(bf.row(b), xi[sel]))
+    assert np.array_equal(got_kernel, got_ref)
+    assert np.array_equal(got_kernel, want)
+    # the sampled interval must bracket the uniform
+    cdf = np.asarray(bf.cdf)
+    d, x = np.asarray(did), np.asarray(xi)
+    assert np.all(cdf[d, got_kernel] <= x)
+    assert np.all(x < cdf[d, got_kernel + 1])
+
+
+def test_ref_forest_sample_batched_explicit_oracle():
+    """The ref oracle itself against brute-force searchsorted rows (so the
+    kernel test above is not two copies of one bug)."""
+    rng = np.random.default_rng(5)
+    B, n, m = 4, 50, 16
+    W = np.stack([
+        normalize_weights(rng.random(n).astype(np.float32) + 1e-3)
+        for _ in range(B)
+    ])
+    bf = build_forest_batched(jnp.asarray(W), m)
+    Q = 512
+    did = jnp.asarray(rng.integers(0, B, Q), jnp.int32)
+    xi = jnp.asarray(rng.random(Q), jnp.float32)
+    got = np.asarray(ref.ref_forest_sample_batched(
+        bf.cdf, bf.table, bf.left, bf.right, did, xi,
+        bf.cell_first, bf.fallback,
+    ))
+    cdf = np.asarray(bf.cdf)
+    for q in range(Q):
+        row = cdf[int(did[q])]
+        assert got[q] == np.searchsorted(row[1:], float(xi[q]), side="right")
+
+
+# ----------------------------------------------------------- pool lifecycle
+
+
+def test_slot_handle_invariants():
+    """Eviction/reuse: rows recycle through the free list with a version
+    bump; every stale-handle operation raises; arenas grow on demand."""
+    rng = np.random.default_rng(7)
+    pool = ForestPool(init_rows=2)
+    h = [pool.insert(rng.random(12) + 1e-3) for _ in range(5)]
+    sc = pool.classes[16]
+    assert sc.rows == 8 and sc.grows == 2  # 2 -> 4 -> 8
+    assert pool.stats()["tenants"] == 5
+
+    pool.evict(h[1])
+    for op in (
+        lambda: pool.evict(h[1]),
+        lambda: pool.sample([h[1]], [0.5]),
+        lambda: pool.update_weights(h[1], rng.random(12)),
+        lambda: pool.forest_row(h[1]),
+    ):
+        with pytest.raises(ValueError):
+            op()
+
+    h2 = pool.insert(rng.random(9) + 1e-3)  # same class, recycled row
+    assert h2.size_class == 16
+    assert h2.row == h[1].row and h2.version == h[1].version + 1
+    # the recycled slot serves the NEW tenant
+    out = pool.sample([h2] * 64, rng.random(64))
+    assert np.all((0 <= out) & (out < 9))
+
+    # update keeps n fixed and rejects ambiguous / broadcastable forms
+    with pytest.raises(ValueError):
+        pool.update_weights(h[0], rng.random(13))
+    with pytest.raises(ValueError):
+        pool.update_weights(h[0], delta=np.zeros(1))  # would broadcast
+    with pytest.raises(ValueError):
+        pool.update_weights(h[0], delta=np.zeros(16))  # padded-size slip
+    with pytest.raises(ValueError):
+        pool.update_weights(h[0], rng.random(12), delta=np.zeros(12))
+    with pytest.raises(ValueError):
+        pool.update_weights(h[0])
+
+
+def test_pool_update_weights_matches_fresh_build():
+    """In-place re-target == fresh padded standalone build, bit for bit;
+    bit-unchanged updates skip the rebuild (delta_skips counts them)."""
+    rng = np.random.default_rng(11)
+    pool = ForestPool()
+    w0 = rng.random(40) + 1e-3
+    h = pool.insert(w0)
+    sc = pool.classes[h.size_class]
+
+    w1 = rng.random(40) + 1e-3
+    pool.update_weights(h, w1)
+    wn = normalize_weights(np.asarray(w1, np.float64))
+    padded = np.pad(wn, (0, h.size_class - len(wn)))
+    want = forest_to_numpy(build_forest(jnp.asarray(padded), sc.m))
+    got = forest_to_numpy(pool.forest_row(h))
+    for k in _KEYS:
+        assert np.array_equal(got[k], want[k]), k
+    assert sc.delta_rebuilds == 1
+
+    # exact power-of-two scaling normalizes away: no bits move, no rebuild
+    pool.update_weights(h, np.asarray(w1, np.float64) * 2.0)
+    assert sc.delta_skips == 1
+    got2 = forest_to_numpy(pool.forest_row(h))
+    for k in _KEYS:
+        assert np.array_equal(got2[k], want[k]), k
+
+    # delta form
+    d = np.zeros(40)
+    d[3] = 0.5
+    pool.update_weights(h, delta=d)
+    wd = normalize_weights(np.asarray(w1, np.float64) * 2.0 + d)
+    padded = np.pad(wd, (0, h.size_class - len(wd)))
+    want = forest_to_numpy(build_forest(jnp.asarray(padded), sc.m))
+    got3 = forest_to_numpy(pool.forest_row(h))
+    for k in _KEYS:
+        assert np.array_equal(got3[k], want[k]), k
+
+
+def test_pool_mixed_batch_chi_square():
+    """GOF: mixed-size-class drains follow each tenant's own distribution
+    (chi-square per tenant on its share of one bulk drain)."""
+    rng = np.random.default_rng(13)
+    pool = ForestPool()
+    ps = [
+        normalize_weights(rng.random(n) ** 2 + 1e-3)
+        for n in (6, 16, 40)
+    ]
+    handles = pool.insert_many(ps)
+    per = 1 << 13
+    qh = [h for h in handles for _ in range(per)]
+    xi = rng.random(len(qh)).astype(np.float32)
+    out = pool.sample(qh, xi, use_pallas=False)
+    for t, (h, p) in enumerate(zip(handles, ps)):
+        draws = out[t * per:(t + 1) * per]
+        counts = np.bincount(draws, minlength=len(p))
+        expected = p.astype(np.float64) * per
+        chi2 = float(np.sum(
+            (counts - expected) ** 2 / np.maximum(expected, 1e-9)
+        ))
+        # dof ~ len(p)-1 (mean ~dof, sd ~sqrt(2 dof)); generous guard
+        assert chi2 < len(p) + 8 * np.sqrt(2 * len(p)), (t, chi2)
+
+
+# ----------------------------------------------------------- serving wiring
+
+
+def test_pooled_sampler_batched_drain_matches_manual():
+    """PooledForestSampler's drain == manually inverting each tenant's
+    padded forest at the same QMC stream values (the batched path changes
+    the launch structure, never the draw)."""
+    from repro.core import sample_forest
+    from repro.serve.sampler import PooledForestSampler, QmcStreams
+
+    rng = np.random.default_rng(17)
+    ps = PooledForestSampler(n_slots=8, seed=4, use_pallas=False)
+    tenants = [rng.random(n) + 1e-3 for n in (5, 30, 30, 90)]
+    handles = ps.add_many(tenants)
+    twin = QmcStreams(8, seed=4)
+    slots = np.asarray([0, 3, 5, 6])
+    for _ in range(3):
+        got = ps.sample(handles, slots)
+        xi = twin.next(slots)
+        for i, h in enumerate(handles):
+            want = int(np.asarray(sample_forest(
+                ps.pool.forest_row(h), jnp.asarray([xi[i]])))[0])
+            assert got[i] == min(want, h.n - 1), (i, got[i], want)
+
+
+def test_evicting_degenerate_tenant_clears_fallback_tax():
+    """A tied-weight tenant flags fallback cells; evicting it must clear
+    the row's flags so the class's future drains skip the side-table
+    bisection path (ops keys it off fallback.any() over the stack)."""
+    rng = np.random.default_rng(23)
+    w_tied = np.zeros(16, np.float32)
+    w_tied[5] = 1.0
+    pool = ForestPool()
+    h_ok = pool.insert(rng.random(16) + 1e-3)
+    h_deg = pool.insert(w_tied)
+    sc = pool.classes[16]
+    assert bool(np.asarray(sc.forest.fallback).any())
+    assert sc.degenerate_rows == {h_deg.row}
+    pool.evict(h_deg)
+    assert not bool(np.asarray(sc.forest.fallback).any())
+    assert not sc.degenerate_rows
+    out = pool.sample([h_ok] * 32, rng.random(32))
+    assert np.all((0 <= out) & (out < 16))
+
+
+def test_engine_prior_request_outlives_kv_budget():
+    """max_seq is a KV budget; prior-backed slots hold no KV, so a prior
+    request must produce all max_new draws even past max_seq steps."""
+    from repro.serve import PooledForestSampler, Request, ServeEngine
+
+    eng = ServeEngine(params=None, cfg=None, n_slots=2, max_seq=8,
+                      prior_sampler=PooledForestSampler(
+                          n_slots=2, use_pallas=False))
+    req = Request(rid=0, prompt=np.zeros(1, np.int64), max_new=20,
+                  prior=np.ones(5))
+    eng.submit(req)
+    eng.run(max_steps=60)
+    assert req.done and len(req.out) == 20
+
+
+def test_engine_prior_backed_requests_modelless():
+    """params=None engine: pure categorical traffic through the pool —
+    admission, batched drain, retirement eviction, version-safe churn."""
+    from repro.serve import PooledForestSampler, Request, ServeEngine
+
+    rng = np.random.default_rng(19)
+    eng = ServeEngine(params=None, cfg=None, n_slots=3, max_seq=32,
+                      prior_sampler=PooledForestSampler(
+                          n_slots=3, use_pallas=False))
+    reqs = [
+        Request(rid=i, prompt=np.zeros(1, np.int64), max_new=4,
+                prior=rng.random(rng.integers(3, 30)) + 1e-3)
+        for i in range(7)
+    ]
+    for r in reqs:
+        eng.submit(r)
+    eng.run(max_steps=50)
+    for r in reqs:
+        assert r.done and len(r.out) == 4
+        assert all(0 <= t < len(r.prior) for t in r.out)
+    # every tenant was evicted at retirement
+    assert eng.prior_sampler.pool.stats()["tenants"] == 0
+    with pytest.raises(ValueError):
+        eng.submit(Request(rid=99, prompt=np.zeros(1, np.int64)))
+
+
+# ------------------------------------------------- 8-fake-device (slow lane)
+
+
+@pytest.mark.slow
+def test_pool_conformance_8dev():
+    """The acceptance gate under 8 fake devices: batched build rows stay
+    bit-identical to single builds and forest_sample_batched (kernel + ref)
+    agrees elementwise with the per-distribution reference across mixed
+    size classes."""
+    script = textwrap.dedent("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import build_forest, forest_to_numpy
+        from repro.core.cdf import normalize_weights
+        from repro.kernels import ops
+        from repro.pool import ForestPool, build_forest_batched
+
+        assert jax.device_count() == 8
+        KEYS = ("cdf", "table", "left", "right", "cell_first", "fallback")
+        rng = np.random.default_rng(0)
+        checked = 0
+        for B, n, m in ((4, 64, 64), (3, 300, 128)):
+            W = np.stack([
+                normalize_weights(rng.random(n) ** 8 + 1e-9)
+                for _ in range(B)
+            ])
+            bf = build_forest_batched(jnp.asarray(W), m)
+            for b in range(B):
+                want = forest_to_numpy(build_forest(jnp.asarray(W[b]), m))
+                for k in KEYS:
+                    assert np.array_equal(
+                        np.asarray(getattr(bf, k)[b]), want[k]), (b, k)
+            Q = 1024
+            did = jnp.asarray(rng.integers(0, B, Q), jnp.int32)
+            xi = jnp.asarray(rng.random(Q), jnp.float32)
+            a = np.asarray(ops.forest_sample_batched(bf, did, xi,
+                                                     use_pallas=True))
+            r = np.asarray(ops.forest_sample_batched(bf, did, xi,
+                                                     use_pallas=False))
+            want = np.empty(Q, np.int32)
+            for b in range(B):
+                sel = np.flatnonzero(np.asarray(did) == b)
+                want[sel] = np.asarray(ops.forest_sample(bf.row(b), xi[sel]))
+            assert np.array_equal(a, r) and np.array_equal(a, want), (B, n, m)
+            checked += 1
+
+        # mixed size classes through the pool arena
+        pool = ForestPool()
+        hs = pool.insert_many([rng.random(s) + 1e-3 for s in (5, 20, 70, 200)])
+        qh = [hs[i] for i in rng.integers(0, len(hs), 512)]
+        u = rng.random(512).astype(np.float32)
+        a = pool.sample(qh, u, use_pallas=True)
+        b = pool.sample(qh, u, use_pallas=False)
+        assert np.array_equal(a, b)
+        print("POOL_CONFORMANCE_OK", checked)
+    """)
+    env = dict(os.environ, PYTHONPATH="src")
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    p = subprocess.run(
+        [sys.executable, "-c", script], capture_output=True, text=True,
+        env=env, cwd=os.getcwd(), timeout=900,
+    )
+    assert "POOL_CONFORMANCE_OK" in p.stdout, (
+        p.stdout[-2000:] + p.stderr[-4000:]
+    )
