@@ -29,8 +29,11 @@ _NUM = re.compile(r"^-?\d+(\.\d+)?([eE][+-]?\d+)?$")
 # (n=65536 vanishing from the construction sweep IS a missing row, not value
 # drift). Measurements (us, Mentries_s, max/avg/...) stay free to drift.
 # "B"/"tenants"/"classes" identify the pool rows (batched-build batch size
-# and the mixed-size-class drain shape).
-_PARAMS = frozenset({"n", "m", "devices", "B", "tenants", "classes"})
+# and the mixed-size-class drain shape). "bucket" is the routed drain's
+# per-(src,dst) bucket capacity on the forest_sharded_routed_d* rows —
+# deterministic under the fixed bench seed, and the structural witness that
+# each shard descends ~B/D lanes instead of the full batch.
+_PARAMS = frozenset({"n", "m", "devices", "B", "tenants", "classes", "bucket"})
 
 
 def line_key(line: str) -> str:

@@ -141,6 +141,7 @@ def run_delta(sizes=(1 << 12,)):
                     "update_us": t_upd * 1e6, "full_us": t_full * 1e6,
                     "dirty_shards": stats["dirty_shards"],
                     "dirty_chunks": stats["dirty_chunks"],
+                    "rebuilt_windows": stats["rebuilt_windows"],
                 }
             )
     return rows
@@ -165,7 +166,8 @@ def main() -> list[str]:
         f"construction_delta,n={r['n']},devices={r['devices']},"
         f"kind={r['kind']},update_us={r['update_us']:.0f},"
         f"full_rebuild_us={r['full_us']:.0f},"
-        f"dirty_shards={r['dirty_shards']},dirty_chunks={r['dirty_chunks']}"
+        f"dirty_shards={r['dirty_shards']},dirty_chunks={r['dirty_chunks']},"
+        f"rebuilt_windows={r['rebuilt_windows']}"
         for r in run_delta()
     ]
     return lines

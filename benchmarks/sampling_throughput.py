@@ -57,11 +57,19 @@ def run(n: int = 1 << 16, m: int | None = None, batch: int = 1 << 16):
 
 
 def run_sharded(n: int = 1 << 16, batch: int = 1 << 16):
-    """Owner-routed sampling over the cell-partitioned *windowed* forest
-    across fake-device counts (repro.dist.forest.sample_sharded). Each row
-    reports the static per-device leaf window the descent runs over —
-    the per-device working set, which shrinks with the shard count. Full
-    sweep needs XLA_FLAGS=--xla_force_host_platform_device_count=8."""
+    """Sampling over the cell-partitioned *windowed* forest across
+    fake-device counts (repro.dist.forest.sample_sharded), both paths:
+
+      * ``forest_sharded_d{D}``        — replicated masked-psum oracle
+        (every shard descends the full batch; kept as the reference).
+      * ``forest_sharded_routed_d{D}`` — owner-routed all-to-all bulk
+        drain; each shard descends only its capacity-padded ~B/D bucket.
+
+    Each row reports the static per-device leaf window the descent runs
+    over; routed rows additionally report the per-(src,dst) bucket
+    capacity — the descent lane count is D*bucket per shard, vs the full
+    padded batch on the oracle. Full sweep needs
+    XLA_FLAGS=--xla_force_host_platform_device_count=8."""
     from jax.sharding import Mesh
 
     from repro.dist import forest as DF
@@ -74,11 +82,24 @@ def run_sharded(n: int = 1 << 16, batch: int = 1 << 16):
     for D in (c for c in (1, 2, 4, 8) if c <= len(devices)):
         mesh = Mesh(np.asarray(devices[:D]), ("data",))
         sf = DF.build_forest_sharded(jnp.asarray(w), n, mesh=mesh)
-        us = _time(lambda: DF.sample_sharded(sf, xi, mesh=mesh), reps=5)
+        us = _time(
+            lambda: DF.sample_sharded(sf, xi, mesh=mesh, routed=False), reps=5
+        )
         rows.append(
             {
                 "name": f"forest_sharded_d{D}", "us": us, "mps": batch / us,
                 "window": sf.capacity,
+            }
+        )
+        plan = DF.drain_plan(sf, xi, mesh=mesh)
+        us = _time(
+            lambda: DF.sample_sharded(sf, xi, mesh=mesh, routed=True), reps=5
+        )
+        rows.append(
+            {
+                "name": f"forest_sharded_routed_d{D}", "us": us,
+                "mps": batch / us, "window": sf.capacity,
+                "bucket": plan["bucket_capacity"],
             }
         )
     return rows
@@ -89,11 +110,14 @@ def main() -> list[str]:
         f"throughput,{name},us_per_call={us:.0f},Msamples_s={mps:.2f}"
         for name, us, mps in run()
     ]
-    lines += [
-        f"throughput,{r['name']},us_per_call={r['us']:.0f},"
-        f"Msamples_s={r['mps']:.2f},window={r['window']}"
-        for r in run_sharded()
-    ]
+    for r in run_sharded():
+        line = (
+            f"throughput,{r['name']},us_per_call={r['us']:.0f},"
+            f"Msamples_s={r['mps']:.2f},window={r['window']}"
+        )
+        if "bucket" in r:
+            line += f",bucket={r['bucket']}"
+        lines.append(line)
     return lines
 
 

@@ -1,7 +1,7 @@
-"""Sharded forest demo: cell-partitioned *windowed* build + owner-routed
-sampling over 8 fake CPU devices, bit-identical to the single-device path —
-plus occupancy rebalancing for a spiky distribution and an in-place delta
-update that rebuilds only the dirty shards.
+"""Sharded forest demo: cell-partitioned *windowed* build + the owner-routed
+all-to-all bulk drain over 8 fake CPU devices, bit-identical to the
+single-device path — plus occupancy rebalancing for a spiky distribution and
+an in-place delta update that rebuilds only the dirty shards' windows.
 
   PYTHONPATH=src python examples/sharded_forest.py
 
@@ -45,12 +45,27 @@ print(f"windowed: each of the {D} shards built a {sharded.capacity}-leaf "
       f"window of the {n}-leaf world "
       f"(owned leaves per shard: {np.asarray(sharded.window_count).tolist()})")
 
-# --- sample: owner-routed descent vs Algorithm 2 ----------------------------
+# --- sample: owner-routed bulk drain vs Algorithm 2 -------------------------
+# The batch is sharded over the mesh data axis. Each shard buckets its
+# ~B/D draws by owning shard (host-planned static bucket capacity), one
+# all_to_all delivers every draw to its owner, the owner descends ONLY its
+# owned draws over its local leaf window, and a second all_to_all routes the
+# interval ids back. The drain plan shows the structural win: descent lanes
+# per shard ~B/D, not the full batch every shard pays on the replicated
+# masked-psum oracle (routed=False, kept as the reference).
 xi = jnp.asarray(np.random.default_rng(0).random(1 << 16), jnp.float32)
+plan = DF.drain_plan(sharded, xi)
+print(f"drain plan: {plan['batch']} draws -> {plan['lanes_per_shard']} lanes "
+      f"per shard, bucket capacity {plan['bucket_capacity']} -> each shard "
+      f"descends {plan['descent_lanes']} lanes (oracle descends all "
+      f"{plan['padded_batch']})")
 ids_sharded = np.asarray(DF.sample_sharded(sharded, xi))
+ids_oracle = np.asarray(DF.sample_sharded(sharded, xi, routed=False))
 ids_single = np.asarray(sample_forest(f1, xi))
 assert np.array_equal(ids_sharded, ids_single)
-print(f"sampling: {xi.shape[0]} owner-routed draws == single-device draws")
+assert np.array_equal(ids_oracle, ids_single)
+print(f"sampling: {xi.shape[0]} owner-routed draws == masked-psum oracle "
+      "== single-device draws")
 
 counts = np.bincount(ids_sharded, minlength=n)
 expected = weights * len(np.asarray(xi))
@@ -74,6 +89,19 @@ print(f"rebalance: window capacity {sharded.capacity} -> "
       f"{rebalanced.capacity}, cell ranges "
       + ", ".join(f"[{rbounds[i]},{rbounds[i+1]})" for i in range(D))
       + " — still bit-identical")
+# The two partitions balance *different* loads. Guide cells are
+# equal-probability strata of xi, so the equal-width partition is already
+# optimal for the routed drain's owner loads (~B/D draws each) — it's the
+# *build* that piles onto one shard. Occupancy rebalance flips that: build
+# windows even out, but nearly all cells (hence nearly all draws) now
+# belong to one shard, so its drain bucket saturates at lanes-per-shard.
+rplan = DF.drain_plan(rebalanced, xi)
+assert np.array_equal(np.asarray(DF.sample_sharded(rebalanced, xi)),
+                      ids_single)
+print(f"drain plan equal vs rebalanced partition: bucket "
+      f"{plan['bucket_capacity']} -> {rplan['bucket_capacity']}, descent "
+      f"lanes per shard {plan['descent_lanes']} -> {rplan['descent_lanes']} "
+      f"— build balance and drain balance trade off on spiky weights")
 
 # --- delta update -----------------------------------------------------------
 # Re-target a handful of weights in place: the CDF is patched through the
@@ -95,7 +123,7 @@ for key in updated._fields:
     assert np.array_equal(np.asarray(getattr(updated, key)),
                           np.asarray(getattr(scratch, key))), key
 from repro.core.cdf import SCAN_CHUNKS  # noqa: E402
-print(f"delta update: {stats['dirty_shards']}/{D} shards rebuilt "
+print(f"delta update: {stats['rebuilt_windows']}/{D} shard windows rebuilt "
       f"({stats['dirty_chunks']}/{SCAN_CHUNKS} scan chunks dirty) — "
       f"ShardedForest bit-identical to a from-scratch rebuild")
 noop, nstats = DF.update_forest_sharded(base, jnp.asarray(iw), with_stats=True)
@@ -114,10 +142,15 @@ for D in (c for c in (1, 2, 4, 8) if c <= len(devices)):
         sf = DF.build_forest_sharded(jnp.asarray(weights), m, mesh=mesh)
         jax.block_until_ready(sf.left)
     t_build = (time.perf_counter() - t0) / 3
-    jax.block_until_ready(DF.sample_sharded(sf, xi, mesh=mesh))
-    t0 = time.perf_counter()
-    for _ in range(3):
-        jax.block_until_ready(DF.sample_sharded(sf, xi, mesh=mesh))
-    t_samp = (time.perf_counter() - t0) / 3
+    times = {}
+    for routed in (True, False):
+        jax.block_until_ready(DF.sample_sharded(sf, xi, mesh=mesh,
+                                                routed=routed))
+        t0 = time.perf_counter()
+        for _ in range(3):
+            jax.block_until_ready(DF.sample_sharded(sf, xi, mesh=mesh,
+                                                    routed=routed))
+        times[routed] = (time.perf_counter() - t0) / 3
     print(f"  D={D}: build {t_build * 1e3:8.1f} ms   "
-          f"sample {t_samp * 1e3:8.1f} ms / {xi.shape[0]} draws")
+          f"sample routed {times[True] * 1e3:8.1f} ms / "
+          f"oracle {times[False] * 1e3:8.1f} ms / {xi.shape[0]} draws")

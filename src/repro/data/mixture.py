@@ -20,12 +20,16 @@ from repro.core.lds import radical_inverse_base2
 
 class MixtureSampler:
     def __init__(self, weights, m: int | None = None, seed: int = 0,
-                 sharded: bool = False, mesh=None, rebalance: bool = False):
+                 sharded: bool = False, mesh=None, rebalance: bool = False,
+                 routed: bool = True):
         self._raw = np.asarray(weights, np.float64)
         w = normalize_weights(self._raw)
         self.weights = w
         m = m or max(len(w), 16)
         self.sharded = sharded
+        # Owner-routed all-to-all bulk drain (default) vs the replicated
+        # masked-psum oracle — identical draws; routed is the scaling path.
+        self.routed = routed
         if sharded:
             # Opt-in cell-partitioned build/sampling over the mesh data axis
             # (bit-identical to the single-device path; repro.dist.forest).
@@ -70,7 +74,7 @@ class MixtureSampler:
         if self.sharded:
             from repro.dist import forest as DF
 
-            return np.asarray(
-                DF.sample_sharded(self.forest, jnp.asarray(xi), mesh=self.mesh)
-            )
+            return np.asarray(DF.sample_sharded(
+                self.forest, jnp.asarray(xi), mesh=self.mesh, routed=self.routed
+            ))
         return np.asarray(sample_forest(self.forest, jnp.asarray(xi)))

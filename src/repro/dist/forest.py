@@ -40,20 +40,31 @@ Windowed shard-local builds (the scaling contract; tests pin it):
   every device re-derives the serial carry chain identically. The carry is
   deliberately *not* a ``psum`` of totals: a tree reduction has
   order-dependent rounding, and tree topology depends on CDF *bit patterns*.
-* Sampling routes each uniform to its owning shard (cell id against the
-  replicated partition bounds), the owner runs the local Algorithm-2 descent
-  over its window (global node id minus window start), and results combine
-  with a masked ``psum`` (each lane has exactly one owner, so the sum is
-  exact) — elementwise identical to ``core.sample.sample_forest``.
+* Sampling is an **owner-routed bulk drain** (Hübschle-Schneider & Sanders:
+  bulk queries are the natural parallel granularity). The batch is sharded
+  over the mesh data axis; each shard buckets its ~B/D draws by owning
+  shard (cell id against the replicated partition bounds, stable sort,
+  host-planned static bucket capacity), exchanges buckets with one
+  ``all_to_all``, runs the window-local Algorithm-2 descent on **only the
+  ~B/D draws it owns** (the descent ``while_loop`` terminates on the local
+  deepest lane, not the global one), and routes interval ids back through a
+  second ``all_to_all`` plus the inverse sort permutation — elementwise
+  identical to ``core.sample.sample_forest``, with per-shard work that
+  *shrinks* as devices grow instead of staying O(B) per shard. The old
+  replicated masked-psum merge (every shard descends the full batch, exact
+  one-owner-per-lane ``psum``) is kept behind ``routed=False`` as the
+  reference oracle; the conformance suite runs both.
 
 Delta updates (:func:`update_forest_sharded`): a weight update patches the
 CDF through the same fixed ``SCAN_CHUNKS`` grid (identical reassociation, so
 the result is bit-identical to a from-scratch scan), recomputes the
 Algorithm-1 per-element work through :mod:`repro.kernels.forest_delta`
 (new separator distances + changed-leaf-bits mask), and rebuilds only
-window-sized problems — shards whose leaf windows carry no changed bits
-keep their partial arrays byte-for-byte, and a no-op delta returns without
-touching the trees at all. The result is bit-identical to a from-scratch
+window-sized problems — the dirty-gated program runs the tree build on
+**only the dirty shards** (clean shards pass their window and cell-table
+rows through byte-for-byte, so a sparse update does strictly less device
+work than a full rebuild), and a no-op delta returns without touching the
+trees at all. The result is bit-identical to a from-scratch
 sharded rebuild over the same partition (the delta differential tests gate
 this).
 """
@@ -89,6 +100,10 @@ from repro.kernels import ops
 # enough that the per-device window still shrinks ~linearly with the shard
 # count (a pow2 round would flatten 5/8ths of the sweep).
 _CAPACITY_GRANULE = 64
+# Routed-drain bucket capacities round up to this granule: small owner-load
+# drift between batches reuses the compiled drain program, and the padding
+# overhead stays a few lanes per (source, owner) pair.
+_BUCKET_GRANULE = 16
 
 
 class ShardedForest(NamedTuple):
@@ -318,6 +333,51 @@ def _plan_windows(cells_np: np.ndarray, bounds: np.ndarray, n: int):
     return starts, counts, _round_capacity(counts.max(initial=1), n)
 
 
+def _window_build_local(
+    cdf, d_full, bounds, starts, idx, *, m: int, n: int, cap: int,
+    m_cap: int, fallback_slack: int,
+):
+    """One shard's windowed tree build (inside ``shard_map``): slice the
+    ``cap``-sized leaf window, build the owned cell range's trees. Shared by
+    the full builder and the dirty-gated delta builder — both must run the
+    byte-identical program or the delta bit-identity contract breaks."""
+    data = lower_bounds(cdf)
+    start = starts[idx]
+    cell_lo, cell_hi = bounds[idx], bounds[idx + 1]
+    wdata = jax.lax.dynamic_slice(data, (start,), (cap,))
+    wcells = _cells(wdata, m)
+    if cap > 1:
+        wd = jax.lax.dynamic_slice(d_full, (start,), (cap - 1,))
+    else:
+        wd = jnp.zeros((0,), jnp.uint32)
+    left, right, tbl, cf, fb = _build_cell_trees(
+        wdata, wd, wcells, m=m, cell_lo=cell_lo, m_local=m_cap,
+        m_owned=cell_hi - cell_lo, node_offset=start, n_total=n,
+        fallback_slack=fallback_slack,
+    )
+    return tbl, left, right, cf, fb.astype(jnp.int32)
+
+
+def _combine_cell_rows(tbl, cf, fb_i32, bounds, idx, *, m: int, m_cap: int, axis: str):
+    """Combine owned per-cell rows into replicated (m,) tables: targets are
+    disjoint across shards and slack rows route to m (dropped), so the psum
+    only ever adds zeros to the single contributor."""
+    cell_lo, cell_hi = bounds[idx], bounds[idx + 1]
+    cids = cell_lo + jnp.arange(m_cap, dtype=jnp.int32)
+    owned_c = jnp.arange(m_cap, dtype=jnp.int32) < (cell_hi - cell_lo)
+    tgt = jnp.where(owned_c, cids, m)
+    table_g = jax.lax.psum(
+        jnp.zeros((m,), jnp.int32).at[tgt].set(tbl, mode="drop"), axis
+    )
+    cf_g = jax.lax.psum(
+        jnp.zeros((m,), jnp.int32).at[tgt].set(cf, mode="drop"), axis
+    )
+    fb_g = jax.lax.psum(
+        jnp.zeros((m,), jnp.int32).at[tgt].set(fb_i32, mode="drop"), axis
+    )
+    return table_g, cf_g, fb_g > 0
+
+
 @functools.lru_cache(maxsize=128)
 def _windowed_builder(
     mesh: Mesh, axis: str, m: int, n: int, cap: int, m_cap: int,
@@ -333,42 +393,69 @@ def _windowed_builder(
 
     def shard_fn(cdf, d_full, bounds, starts):
         idx = jax.lax.axis_index(axis)
-        data = lower_bounds(cdf)
-        start = starts[idx]
-        cell_lo, cell_hi = bounds[idx], bounds[idx + 1]
-        wdata = jax.lax.dynamic_slice(data, (start,), (cap,))
-        wcells = _cells(wdata, m)
-        if cap > 1:
-            wd = jax.lax.dynamic_slice(d_full, (start,), (cap - 1,))
-        else:
-            wd = jnp.zeros((0,), jnp.uint32)
-        left, right, tbl, cf, fb = _build_cell_trees(
-            wdata, wd, wcells, m=m, cell_lo=cell_lo, m_local=m_cap,
-            m_owned=cell_hi - cell_lo, node_offset=start, n_total=n,
-            fallback_slack=fallback_slack,
+        tbl, left, right, cf, fb = _window_build_local(
+            cdf, d_full, bounds, starts, idx, m=m, n=n, cap=cap,
+            m_cap=m_cap, fallback_slack=fallback_slack,
         )
-        # Combine owned per-cell rows into replicated (m,) tables: targets
-        # are disjoint across shards and slack rows route to m (dropped), so
-        # the psum only ever adds zeros to the single contributor.
-        cids = cell_lo + jnp.arange(m_cap, dtype=jnp.int32)
-        owned_c = jnp.arange(m_cap, dtype=jnp.int32) < (cell_hi - cell_lo)
-        tgt = jnp.where(owned_c, cids, m)
-        table_g = jax.lax.psum(
-            jnp.zeros((m,), jnp.int32).at[tgt].set(tbl, mode="drop"), axis
+        table_g, cf_g, fb_g = _combine_cell_rows(
+            tbl, cf, fb, bounds, idx, m=m, m_cap=m_cap, axis=axis
         )
-        cf_g = jax.lax.psum(
-            jnp.zeros((m,), jnp.int32).at[tgt].set(cf, mode="drop"), axis
-        )
-        fb_g = jax.lax.psum(
-            jnp.zeros((m,), jnp.int32).at[tgt].set(
-                fb.astype(jnp.int32), mode="drop"
-            ),
-            axis,
-        )
-        return table_g, left[None], right[None], cf_g, fb_g > 0
+        return table_g, left[None], right[None], cf_g, fb_g
 
     return jax.jit(shard_map(
         shard_fn, mesh=mesh, in_specs=(P(), P(), P(), P()),
+        out_specs=(P(), P(axis), P(axis), P(), P()),
+        check_rep=False,
+    ))
+
+
+@functools.lru_cache(maxsize=128)
+def _windowed_delta_builder(
+    mesh: Mesh, axis: str, m: int, n: int, cap: int, m_cap: int,
+    fallback_slack: int,
+):
+    """Cached jitted **dirty-gated** windowed-build program (delta updates).
+
+    Like :func:`_windowed_builder` plus the previous forest's per-shard
+    windows, the replicated old cell tables, and a replicated (D,) dirty
+    mask. Each shard runs the window build **only when its dirty flag is
+    set** (``lax.cond`` executes one branch, so a sparse update really does
+    strictly less device tree work than a full rebuild); clean shards
+    contribute their old window rows and old cell-table rows byte-for-byte.
+    That reuse is exact: a clean shard's owned leaf bits are unchanged and
+    the window plan is unchanged, so every one of its outputs — child refs
+    *and* its ``table``/``cell_first``/``fallback`` rows, all pure functions
+    of the owned window data — would rebuild to the identical bits (the
+    delta differential suite gates this)."""
+
+    def shard_fn(cdf, d_full, bounds, starts, dirty,
+                 old_left, old_right, old_table, old_cf, old_fb):
+        idx = jax.lax.axis_index(axis)
+        cell_lo = bounds[idx]
+
+        def build(_):
+            return _window_build_local(
+                cdf, d_full, bounds, starts, idx, m=m, n=n, cap=cap,
+                m_cap=m_cap, fallback_slack=fallback_slack,
+            )
+
+        def keep(_):
+            safe = jnp.clip(cell_lo + jnp.arange(m_cap, dtype=jnp.int32),
+                            0, m - 1)
+            return (old_table[safe], old_left[0], old_right[0],
+                    old_cf[safe], old_fb[safe].astype(jnp.int32))
+
+        tbl, left, right, cf, fb = jax.lax.cond(
+            dirty[idx] > 0, build, keep, operand=None
+        )
+        table_g, cf_g, fb_g = _combine_cell_rows(
+            tbl, cf, fb, bounds, idx, m=m, m_cap=m_cap, axis=axis
+        )
+        return table_g, left[None], right[None], cf_g, fb_g
+
+    return jax.jit(shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(P(), P(), P(), P(), P(), P(axis), P(axis), P(), P(), P()),
         out_specs=(P(), P(axis), P(axis), P(), P()),
         check_rep=False,
     ))
@@ -540,9 +627,13 @@ def update_forest_sharded(
     With ``with_stats=True`` also returns a dict: ``dirty_shards`` /
     ``dirty_chunks`` (scan-grid rows re-spanned by changed CDF entries) /
     ``plan_changed`` (leaf windows moved -> full windowed rebuild) /
-    ``rebuilt`` (the tree-build shard_map actually ran) / ``capacity``
-    (the static window adopted) / ``capacity_kept`` (hysteresis retained a
-    window larger than the fresh plan's).
+    ``rebuilt`` (the tree-build shard_map actually ran) /
+    ``rebuilt_windows`` (window builds the devices actually executed: the
+    dirty-gated program runs the tree build only on dirty shards, so a
+    sparse update does strictly less device work than a full rebuild —
+    the structural fact the delta benchmarks pin, never wall-clock) /
+    ``capacity`` (the static window adopted) / ``capacity_kept``
+    (hysteresis retained a window larger than the fresh plan's).
     """
     mesh = mesh if mesh is not None else default_mesh(axis)
     D = _shard_count(mesh, axis)
@@ -578,7 +669,7 @@ def update_forest_sharded(
     if changed_cdf.size == 0:
         stats = dict(
             dirty_shards=0, dirty_chunks=0, plan_changed=False, rebuilt=False,
-            capacity=forest.capacity, capacity_kept=False,
+            rebuilt_windows=0, capacity=forest.capacity, capacity_kept=False,
         )
         out = forest._replace(cdf=new_cdf)  # same bits; fresh buffer
         return (out, stats) if with_stats else out
@@ -606,28 +697,104 @@ def update_forest_sharded(
     dirty = np.array(
         [bool(lc[s : s + c].any()) for s, c in zip(starts, counts)]
     )
-    out = build_forest_from_cdf_sharded(
-        new_cdf, m, mesh=mesh, axis=axis, fallback_slack=fallback_slack,
-        partition=bounds, d_full=d_new, cells_np=cells_np, capacity=cap,
-    )
     if plan_same:
-        # Clean shards' windows are untouched bit ranges: keep the existing
-        # partials byte-for-byte (the rebuilt rows are provably identical —
-        # the select documents the reuse and spares the copies).
-        sel = jnp.asarray(dirty)[:, None]
-        out = out._replace(
-            left=jnp.where(sel, out.left, forest.left),
-            right=jnp.where(sel, out.right, forest.right),
+        # Dirty-gated rebuild: only the dirty shards run their window build
+        # on device (lax.cond executes one branch); clean shards pass their
+        # old window rows and old cell-table rows through byte-for-byte.
+        m_cap = _round_capacity(np.diff(bounds).max(initial=1), m)
+        table, left, right, cf, fb = _windowed_delta_builder(
+            mesh, axis, m, n, cap, m_cap, fallback_slack
+        )(
+            new_cdf, d_new,
+            jnp.asarray(bounds, jnp.int32),
+            jnp.asarray(w_starts, jnp.int32),
+            jnp.asarray(dirty, jnp.int32),
+            forest.left, forest.right, forest.table,
+            forest.cell_first[:m], forest.fallback,
+        )
+        out = ShardedForest(
+            new_cdf, table, left, right,
+            jnp.concatenate([cf, jnp.asarray([n - 1], jnp.int32)]),
+            fb, forest.cell_bounds, forest.window_start, forest.window_count,
+        )
+    else:
+        out = build_forest_from_cdf_sharded(
+            new_cdf, m, mesh=mesh, axis=axis, fallback_slack=fallback_slack,
+            partition=bounds, d_full=d_new, cells_np=cells_np, capacity=cap,
         )
     stats = dict(
         dirty_shards=int(dirty.sum()) if plan_same else D,
         dirty_chunks=dirty_chunks,
         plan_changed=not plan_same,
         rebuilt=True,
+        rebuilt_windows=int(dirty.sum()) if plan_same else D,
         capacity=cap,
         capacity_kept=cap > fresh_cap,
     )
     return (out, stats) if with_stats else out
+
+
+def _round_bucket(count: int, limit: int) -> int:
+    """Static per-(source, owner) bucket capacity: the observed max count
+    rounded up to the bucket granule (program reuse under owner-load drift),
+    never above the per-shard lane count (can't send more than you hold)."""
+    k = -(-max(int(count), 1) // _BUCKET_GRANULE) * _BUCKET_GRANULE
+    return max(min(k, limit), 1)
+
+
+@functools.partial(jax.jit, static_argnames=("m",))
+def _draw_owners(xi: jax.Array, bounds: jax.Array, m: int) -> jax.Array:
+    """Owning shard of each uniform: cell id against the partition bounds.
+
+    The same float/int ops the drain program runs under ``shard_map`` — the
+    host-side bucket plan and the device-side routing must agree draw for
+    draw. Empty shards (repeated bounds) are skipped by the right-sided
+    search, so every draw has exactly one owner."""
+    g = jnp.clip(jnp.floor(xi * jnp.float32(m)).astype(jnp.int32), 0, m - 1)
+    return jnp.clip(
+        jnp.searchsorted(bounds, g, side="right").astype(jnp.int32) - 1,
+        0, bounds.shape[0] - 2,
+    )
+
+
+def _drain_plan(forest: ShardedForest, xi: jax.Array, D: int):
+    """Host-side routed-drain plan: pad the batch to D lanes-per-shard, count
+    draws per (source shard, owning shard), round the max to the static
+    bucket capacity. Returns ``(plan, xi_padded)``."""
+    B = int(xi.shape[0])
+    if B == 0:
+        raise ValueError("cannot drain an empty batch")
+    lanes = -(-B // D)
+    b_pad = lanes * D
+    xi_p = jnp.pad(
+        jnp.asarray(xi, jnp.float32), (0, b_pad - B), constant_values=-1.0
+    )
+    owners = np.asarray(_draw_owners(xi_p, forest.cell_bounds, forest.m))
+    counts = np.stack(
+        [np.bincount(row, minlength=D) for row in owners.reshape(D, lanes)]
+    )
+    K = _round_bucket(counts.max(initial=1), lanes)
+    plan = dict(
+        batch=B, padded_batch=b_pad, lanes_per_shard=lanes,
+        bucket_capacity=K, descent_lanes=D * K, send_counts=counts,
+    )
+    return plan, xi_p
+
+
+def drain_plan(
+    forest: ShardedForest, xi: jax.Array, mesh: Mesh | None = None,
+    axis: str = "data",
+) -> dict:
+    """The routed drain's bucket plan for a batch (what the devices will do,
+    structurally): ``lanes_per_shard`` (the batch shard each device holds),
+    ``bucket_capacity`` (static per-(source, owner) bucket), and
+    ``descent_lanes`` (lanes each shard's Algorithm-2 descent runs over —
+    ~B/D for balanced owner loads, vs the full B every shard pays on the
+    masked-psum oracle path). Tests assert scaling on these shapes, never
+    on wall-clock."""
+    mesh = mesh if mesh is not None else default_mesh(axis)
+    plan, _ = _drain_plan(forest, xi, int(mesh.shape[axis]))
+    return plan
 
 
 def sample_sharded(
@@ -636,34 +803,132 @@ def sample_sharded(
     mesh: Mesh | None = None,
     axis: str = "data",
     use_fallback: bool = True,
+    routed: bool = True,
 ) -> jax.Array:
-    """Algorithm 2 over the sharded forest: owner-routed windowed descent.
+    """Algorithm 2 over the sharded forest: owner-routed bulk drain.
 
-    Each uniform's owning shard is found against the replicated partition
-    bounds; the owner resolves it over its local window (every edge of an
-    owned cell's tree stays inside the window, and global node id minus
-    window start is the local slot) and the per-lane results merge with a
-    masked ``psum`` — exact, because every lane has exactly one owner.
-    Elementwise identical to ``core.sample.sample_forest`` on the gathered
-    forest. Returns global interval ids, replicated."""
+    ``routed=True`` (default): the batch is sharded over the mesh data axis,
+    each shard stably sorts its ~B/D draws by owning shard into
+    capacity-padded buckets (host-planned static shapes), one ``all_to_all``
+    exchanges the buckets, the owner resolves **only its owned draws** over
+    its local window (every edge of an owned cell's tree stays inside the
+    window, and global node id minus window start is the local slot; the
+    descent loop terminates on the *local* deepest lane), and a second
+    ``all_to_all`` plus the inverse sort permutation routes interval ids
+    back to the requesting lanes.
+
+    ``routed=False`` keeps the replicated masked-psum merge as a reference
+    oracle: every shard descends the full batch and the per-lane results
+    combine with an exact one-owner-per-lane ``psum``.
+
+    Both paths are elementwise identical to ``core.sample.sample_forest`` on
+    the gathered forest. Returns global interval ids."""
     mesh = mesh if mesh is not None else default_mesh(axis)
     D = int(mesh.shape[axis])
     if forest.n_shards != D:
         raise ValueError(
             f"forest has {forest.n_shards} shards but mesh axis has {D}"
         )
-    return _sampler(
-        mesh, axis, forest.m, forest.n, forest.capacity, use_fallback
+    if not routed:
+        return _sampler(
+            mesh, axis, forest.m, forest.n, forest.capacity, use_fallback
+        )(
+            forest.table, forest.left, forest.right, forest.fallback,
+            forest.cdf, forest.cell_first, forest.cell_bounds,
+            forest.window_start, jnp.asarray(xi, jnp.float32),
+        )
+    plan, xi_p = _drain_plan(forest, xi, D)
+    out = _routed_sampler(
+        mesh, axis, forest.m, forest.n, forest.capacity, use_fallback,
+        plan["lanes_per_shard"], plan["bucket_capacity"],
     )(
         forest.table, forest.left, forest.right, forest.fallback,
         forest.cdf, forest.cell_first, forest.cell_bounds,
-        forest.window_start, jnp.asarray(xi, jnp.float32),
+        forest.window_start, xi_p,
     )
+    return out[: plan["batch"]]
+
+
+@functools.lru_cache(maxsize=128)
+def _routed_sampler(
+    mesh: Mesh, axis: str, m: int, n: int, cap: int, use_fallback: bool,
+    lanes: int, K: int,
+):
+    """Cached jitted owner-routed all-to-all drain program.
+
+    Each shard holds ``lanes`` draws of the batch and a ``(D, K)`` bucket
+    grid; the tiled ``all_to_all`` is a transpose of that grid across the
+    mesh (and hence its own inverse — the identical collective routes the
+    answers back). Bucket padding lanes carry the sentinel ``-1.0`` and are
+    resolved to ``done`` before the descent starts, so they cost nothing."""
+    D = int(mesh.shape[axis])
+
+    def shard_fn(table, left_l, right_l, fb, cdf, cell_first, bounds, starts, xi_l):
+        idx = jax.lax.axis_index(axis)
+        left_l, right_l = left_l[0], right_l[0]
+        start = starts[idx]
+
+        # Bucket my batch shard by owning shard: stable sort keeps duplicate
+        # uniforms and equal-owner draws in batch order, and the (owner,
+        # within-bucket rank) pair is exactly the slot the owner will answer
+        # at — the round trip needs no index payload at all.
+        g = jnp.clip(jnp.floor(xi_l * jnp.float32(m)).astype(jnp.int32),
+                     0, m - 1)
+        owner = jnp.clip(
+            jnp.searchsorted(bounds, g, side="right").astype(jnp.int32) - 1,
+            0, D - 1,
+        )
+        order = jnp.argsort(owner)                       # stable
+        so, sx = owner[order], xi_l[order]
+        seg = jnp.searchsorted(so, jnp.arange(D, dtype=jnp.int32))
+        rank = jnp.arange(lanes, dtype=jnp.int32) - seg[so].astype(jnp.int32)
+        send = jnp.full((D, K), -1.0, jnp.float32).at[so, rank].set(
+            sx, mode="drop"
+        )
+        recv = jax.lax.all_to_all(send, axis, 0, 0, tiled=True)
+
+        # Window-local Algorithm-2 descent over only my owned draws (~B/D
+        # lanes): the while_loop ends on MY deepest lane, not the world's.
+        rx = recv.reshape(-1)
+        live = rx >= 0.0
+        rg = jnp.clip(jnp.floor(rx * jnp.float32(m)).astype(jnp.int32),
+                      0, m - 1)
+        j = jnp.where(live, table[rg], jnp.int32(-1))
+        if use_fallback:
+            flagged = live & fb[rg] & (j >= 0)
+            bal = _bisect(cdf, rx, cell_first[rg], cell_first[rg + 1], 32)
+            j = jnp.where(flagged, ~bal, j)
+
+        def cond(state):
+            j, it = state
+            return jnp.any(j >= 0) & (it < MAX_DEPTH)
+
+        def body(state):
+            j, it = state
+            jw = jnp.clip(j - start, 0, cap - 1)     # window slot of node j
+            go_left = rx < cdf[jnp.clip(j, 0, n - 1)]
+            nxt = jnp.where(go_left, left_l[jw], right_l[jw])
+            return jnp.where(j >= 0, nxt, j), it + 1
+
+        j, _ = jax.lax.while_loop(cond, body, (j, jnp.int32(0)))
+
+        # Route interval ids back: the same all_to_all inverts the exchange,
+        # then the inverse sort permutation restores batch order.
+        back = jax.lax.all_to_all((~j).reshape(D, K), axis, 0, 0, tiled=True)
+        return jnp.zeros((lanes,), jnp.int32).at[order].set(back[so, rank])
+
+    return jax.jit(shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(P(), P(axis), P(axis), P(), P(), P(), P(), P(), P(axis)),
+        out_specs=P(axis), check_rep=False,
+    ))
 
 
 @functools.lru_cache(maxsize=128)
 def _sampler(mesh: Mesh, axis: str, m: int, n: int, cap: int, use_fallback: bool):
-    """Cached jitted owner-routed windowed sampling program."""
+    """Cached jitted replicated masked-psum sampling program (the reference
+    oracle the routed drain is verified against: every shard descends the
+    full batch; exact merge because every lane has exactly one owner)."""
 
     def shard_fn(table, left_l, right_l, fb, cdf, cell_first, bounds, starts, xi):
         idx = jax.lax.axis_index(axis)

@@ -34,12 +34,25 @@ class QmcStreams:
         self.counters = np.zeros(n_slots, np.uint32)
 
     def next(self, slots: np.ndarray | None = None) -> np.ndarray:
+        """One stream point per requested slot occurrence. A slot repeated k
+        times in one drain draws its next k *distinct* stream points (the
+        j-th occurrence, in call order, advances to counter+j) and its
+        counter advances by k — fancy-index ``counters[slots] += 1`` would
+        collapse duplicate increments and hand every occurrence the same
+        point (identical best-of-n candidates)."""
         if slots is None:
             slots = np.arange(len(self.offsets))
+        slots = np.asarray(slots)
+        order = np.argsort(slots, kind="stable")
+        sorted_slots = slots[order]
+        first = np.searchsorted(sorted_slots, sorted_slots, side="left")
+        rank = np.empty(len(slots), np.uint32)
+        rank[order] = (np.arange(len(slots)) - first).astype(np.uint32)
         xi = (
-            radical_inverse_base2(self.counters[slots]) + self.offsets[slots]
+            radical_inverse_base2(self.counters[slots] + rank)
+            + self.offsets[slots]
         ) % 1.0
-        self.counters[slots] += 1
+        np.add.at(self.counters, slots, 1)
         return xi.astype(np.float32)
 
 
@@ -61,11 +74,14 @@ class ForestSampler:
 
     def __init__(self, weights, m: int | None = None, sharded: bool = False,
                  mesh=None, n_slots: int = 64, seed: int = 0,
-                 rebalance: bool = False):
+                 rebalance: bool = False, routed: bool = True):
         self._raw = np.asarray(weights, np.float64)
         w = normalize_weights(self._raw)
         m = m or max(len(w), 16)
         self.sharded = sharded
+        # Owner-routed all-to-all bulk drain (default) vs the replicated
+        # masked-psum oracle — identical draws; routed is the scaling path.
+        self.routed = routed
         self.streams = QmcStreams(n_slots, seed)
         if sharded:
             from repro.dist import forest as DF  # lazy: serve stays importable
@@ -96,7 +112,9 @@ class ForestSampler:
         if self.sharded:
             from repro.dist import forest as DF
 
-            return np.asarray(DF.sample_sharded(self.forest, xi, mesh=self.mesh))
+            return np.asarray(DF.sample_sharded(
+                self.forest, xi, mesh=self.mesh, routed=self.routed
+            ))
         return np.asarray(sample_forest(self.forest, xi))
 
 

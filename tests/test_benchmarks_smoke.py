@@ -67,6 +67,13 @@ def test_construction_delta_bench_runs():
     by = {r["kind"]: r for r in rows}
     assert by["noop"]["dirty_shards"] == 0 and by["noop"]["dirty_chunks"] == 0
     assert by["sparse"]["dirty_chunks"] == 1
+    # the sparse-costs-more-than-full bug, pinned structurally: sparse
+    # rebuilds only the dirty windows, full rebuilds all of them
+    D = rows[0]["devices"]
+    assert by["noop"]["rebuilt_windows"] == 0
+    assert by["full"]["rebuilt_windows"] == D
+    if D > 1:
+        assert by["sparse"]["rebuilt_windows"] < D
     assert all(r["update_us"] > 0 and r["full_us"] > 0 for r in rows)
 
 
@@ -90,7 +97,13 @@ def test_throughput_sharded_bench_runs():
     from benchmarks.sampling_throughput import run_sharded
 
     rows = run_sharded(n=1 << 10, batch=1 << 12)
-    assert any(r["name"].startswith("forest_sharded_d") for r in rows)
+    names = {r["name"] for r in rows}
+    assert any(n.startswith("forest_sharded_d") for n in names)
+    # both paths per device count: the masked-psum oracle row and the
+    # owner-routed drain row with its static bucket capacity
+    routed = [r for r in rows if r["name"].startswith("forest_sharded_routed")]
+    assert routed and len(routed) * 2 == len(rows)
+    assert all(0 < r["bucket"] <= 1 << 12 for r in routed)
     assert all(0 < r["window"] <= 1 << 10 for r in rows)
 
 

@@ -44,6 +44,31 @@ def test_qmc_mixture_is_lower_variance():
     assert dispersion(True) < 0.5 * dispersion(False)
 
 
+def test_qmc_streams_duplicate_slots_draw_distinct_points():
+    """Regression: a drain with a repeated slot must hand every occurrence
+    its own stream point and advance the counter once per occurrence —
+    fancy-index ``counters[slots] += 1`` collapsed duplicate increments and
+    returned the same uniform for each occurrence (identical best-of-n
+    candidates). The j-th occurrence (call order) must draw the exact point
+    a twin stream draws when drained one occurrence at a time."""
+    from repro.serve.sampler import QmcStreams
+
+    s = QmcStreams(4, seed=9)
+    twin = QmcStreams(4, seed=9)
+    slots = np.asarray([2, 0, 2, 2, 1, 0])
+    xi = s.next(slots)
+    # duplicates draw distinct points...
+    assert len(np.unique(xi[[0, 2, 3]])) == 3  # slot 2 x3
+    assert xi[1] != xi[5]                      # slot 0 x2
+    # ...and each occurrence advances exactly one counter step
+    np.testing.assert_array_equal(s.counters, [2, 1, 3, 0])
+    want = np.asarray([float(twin.next([int(t)])[0]) for t in slots],
+                      np.float32)
+    np.testing.assert_array_equal(xi, want)
+    # a second drain continues the streams, disjoint from the first
+    assert not np.intersect1d(s.next(slots), xi).size
+
+
 def test_batches_deterministic_by_step():
     cfg = C.get_reduced("qwen1_5_0_5b")
     a = make_batch(cfg, 7, 4, 16, seed=3)

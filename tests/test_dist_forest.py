@@ -389,6 +389,145 @@ def test_mixture_sampler_update_weights():
             assert np.array_equal(a.sample(step, 128), b.sample(step, 128))
 
 
+def _drain_batches(rng, B: int = 509):
+    """Routed-drain adversarial uniform batches: generic, duplicate-heavy
+    (every draw repeated, exercising per-occurrence routing), and heavily
+    owner-skewed (all draws land in the last shard's cells)."""
+    plain = rng.random(B).astype(np.float32)
+    dups = np.repeat(rng.random((B + 1) // 2).astype(np.float32), 2)[:B]
+    skew = (np.float32(1.0) - rng.random(B).astype(np.float32) * 1e-4)
+    return {"plain": plain, "dups": dups, "skew": skew}
+
+
+def test_routed_drain_differential_inprocess():
+    """Tentpole gate, fast lane: routed drain == masked-psum oracle ==
+    single-device ``sample_forest`` on the gathered forest, elementwise, at
+    this process's device count — over batch sizes not divisible by the
+    shard count, duplicate uniforms, and all-draws-on-one-shard skew, for
+    equal, rebalanced, and explicit partitions."""
+    mesh = _mesh()
+    D = int(mesh.shape["data"])
+    rng = np.random.default_rng(41)
+    n, m = 600, 64
+    w = rng.random(n).astype(np.float32) ** 6 + np.float32(1e-6)
+    explicit = None
+    if D > 1:
+        explicit = np.linspace(0, m, D + 1).astype(int)
+        explicit[1] = 1  # deliberately lopsided first cell range
+    for tag, kw in (
+        ("equal", {}),
+        ("rebalanced", {"rebalance": True}),
+        ("explicit", {"partition": explicit}),
+    ):
+        if tag == "explicit" and explicit is None:
+            continue
+        sf = DF.build_forest_sharded(jnp.asarray(w), m, mesh=mesh, **kw)
+        f1 = _assert_gather_bit_identical(w, m, sf)
+        for batch_tag, xi in _drain_batches(rng).items():
+            want = np.asarray(sample_forest(f1, jnp.asarray(xi)))
+            routed = np.asarray(
+                DF.sample_sharded(sf, jnp.asarray(xi), mesh=mesh, routed=True)
+            )
+            oracle = np.asarray(
+                DF.sample_sharded(sf, jnp.asarray(xi), mesh=mesh, routed=False)
+            )
+            assert np.array_equal(routed, want), (tag, batch_tag)
+            assert np.array_equal(oracle, want), (tag, batch_tag)
+    # tiny batches, including B < D
+    sf = DF.build_forest_sharded(jnp.asarray(w), m, mesh=mesh)
+    f1 = build_forest(jnp.asarray(w), m)
+    for B in (1, 2, 3, D + 1):
+        xi = rng.random(B).astype(np.float32)
+        want = np.asarray(sample_forest(f1, jnp.asarray(xi)))
+        got = np.asarray(DF.sample_sharded(sf, jnp.asarray(xi), mesh=mesh))
+        assert np.array_equal(got, want), B
+    with pytest.raises(ValueError):
+        DF.sample_sharded(sf, jnp.zeros((0,), jnp.float32), mesh=mesh)
+
+
+def test_drain_plan_structural():
+    """The scaling fix, asserted on bucket *shapes* (never wall-clock): for
+    balanced owner loads each shard's descent runs over a capacity-padded
+    ~B/D bucket — strictly fewer lanes than the full batch the masked-psum
+    oracle descends — while all-on-one-shard skew degrades gracefully to
+    bucket == lanes-per-shard (never dropping a draw)."""
+    mesh = _mesh()
+    D = int(mesh.shape["data"])
+    rng = np.random.default_rng(43)
+    n = m = 1024
+    w = rng.random(n).astype(np.float32) + np.float32(1e-3)
+    sf = DF.build_forest_sharded(jnp.asarray(w), m, mesh=mesh)
+
+    B = 1 << 14
+    balanced = DF.drain_plan(sf, jnp.asarray(rng.random(B), jnp.float32),
+                             mesh=mesh)
+    assert balanced["batch"] == B
+    assert balanced["padded_batch"] == balanced["lanes_per_shard"] * D >= B
+    assert balanced["descent_lanes"] == D * balanced["bucket_capacity"]
+    # every draw (plus padding) is accounted for in the send matrix
+    assert balanced["send_counts"].shape == (D, D)
+    assert balanced["send_counts"].sum() == balanced["padded_batch"]
+    assert balanced["send_counts"].max() <= balanced["bucket_capacity"]
+    if D > 1:
+        # ~B/D descent lanes per shard vs the oracle's full-batch descent
+        assert balanced["descent_lanes"] < balanced["padded_batch"]
+        assert balanced["bucket_capacity"] < balanced["lanes_per_shard"]
+
+    skew = DF.drain_plan(
+        sf, jnp.asarray(np.full(B, 0.999, np.float32)), mesh=mesh
+    )
+    # one owner gets everything: the bucket saturates at lanes-per-shard
+    assert skew["bucket_capacity"] == skew["lanes_per_shard"]
+
+    # batch not divisible by D: padding lanes, batch preserved
+    odd = DF.drain_plan(sf, jnp.asarray(rng.random(D * 16 + 3), jnp.float32),
+                        mesh=mesh)
+    assert odd["batch"] == D * 16 + 3
+    assert odd["padded_batch"] % D == 0 and odd["padded_batch"] >= odd["batch"]
+
+
+def test_sparse_delta_does_less_device_work():
+    """The construction_delta,kind=sparse bug, pinned structurally: a
+    one-leaf-exact perturbation with an unchanged window plan rebuilds only
+    the dirty shards' windows (``rebuilt_windows == dirty_shards``), while a
+    full reweight rebuilds all D — sparse does strictly less device work
+    than full, asserted on rebuild counts from ``with_stats``, never
+    wall-clock."""
+    mesh = _mesh()
+    D = int(mesh.shape["data"])
+    rng = np.random.default_rng(47)
+    n, m = 1024, 64
+    w0 = _int_weights(n, rng)
+    sf0 = DF.build_forest_sharded(jnp.asarray(w0), m, mesh=mesh)
+
+    w1 = w0.copy()
+    w1[500] += 1.0
+    w1[501] -= 1.0
+    upd, st = DF.update_forest_sharded(
+        sf0, jnp.asarray(w1), mesh=mesh, with_stats=True
+    )
+    if not st["plan_changed"]:
+        assert st["rebuilt_windows"] == st["dirty_shards"] == 1
+        if D > 1:
+            assert st["rebuilt_windows"] < D  # strictly less than kind=full
+    # gating never trades away the bit-identity contract
+    _assert_sharded_equal(upd, DF.build_forest_sharded(
+        jnp.asarray(w1), m, mesh=mesh,
+        partition=np.asarray(sf0.cell_bounds), capacity=upd.capacity,
+    ))
+
+    w2 = rng.random(n).astype(np.float32) + np.float32(1e-3)
+    _, st_full = DF.update_forest_sharded(
+        sf0, jnp.asarray(w2), mesh=mesh, with_stats=True
+    )
+    assert st_full["rebuilt_windows"] == D
+
+    _, st_noop = DF.update_forest_sharded(
+        sf0, jnp.asarray(w0), mesh=mesh, with_stats=True
+    )
+    assert st_noop["rebuilt_windows"] == 0
+
+
 # --------------------------------------------- occupancy partition properties
 
 settings = hypothesis.settings(max_examples=40, deadline=None)
@@ -630,6 +769,8 @@ def test_delta_update_matrix_8dev():
             assert_single_device(w1, m, upd, ("sparse", rebalance))
             if not st["plan_changed"]:
                 assert st["dirty_shards"] == 1, st
+                # sparse does strictly less device work than kind=full
+                assert st["rebuilt_windows"] == 1 < 8, st
             assert st["dirty_chunks"] == 1, st
 
             # all cells changed
@@ -641,11 +782,81 @@ def test_delta_update_matrix_8dev():
                 capacity=upd2.capacity)
             assert_sharded_equal(upd2, ref2, ("full", rebalance))
             assert_single_device(w2, m, upd2, ("full", rebalance))
-            assert st2["rebuilt"]
+            assert st2["rebuilt"] and st2["rebuilt_windows"] == 8
         print("DELTA_OK")
     """)
     p = _run(script)
     assert "DELTA_OK" in p.stdout, p.stdout[-2000:] + p.stderr[-4000:]
+
+
+@pytest.mark.slow
+def test_routed_drain_matrix_8dev():
+    """Routed-drain differential matrix at 8 fake devices: routed vs
+    masked-psum oracle vs single-device ``sample_forest`` on the gathered
+    forest, elementwise, across equal/rebalanced/explicit partitions x D in
+    {1, 2, 4, 8} x adversarial batches (sizes not divisible by D, duplicate
+    uniforms, all-draws-on-one-shard skew) — plus the structural scaling
+    claim: balanced descent lanes ~B/D, skew saturating at lanes-per-shard."""
+    script = textwrap.dedent("""
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import Mesh
+        from repro.core import build_forest, sample_forest
+        from repro.dist import forest as DF
+
+        devs = jax.devices()
+        assert len(devs) == 8
+        rng = np.random.default_rng(53)
+        n, m = 600, 64
+        w = rng.random(n).astype(np.float32) ** 6 + np.float32(1e-6)
+        f1 = build_forest(jnp.asarray(w), m)
+
+        def batches(B=509):
+            plain = rng.random(B).astype(np.float32)
+            dups = np.repeat(rng.random((B + 1) // 2).astype(np.float32),
+                             2)[:B]
+            skew = np.float32(1.0) - rng.random(B).astype(np.float32) * 1e-4
+            return {"plain": plain, "dups": dups, "skew": skew}
+
+        checked = 0
+        for D in (1, 2, 4, 8):
+            mesh = Mesh(np.array(devs[:D]), ("data",))
+            explicit = np.linspace(0, m, D + 1).astype(int)
+            if D > 1:
+                explicit[1] = 1
+            for tag, kw in (("equal", {}), ("rebalanced",
+                            {"rebalance": True}),
+                            ("explicit", {"partition": explicit})):
+                sf = DF.build_forest_sharded(jnp.asarray(w), m, mesh=mesh,
+                                             **kw)
+                for btag, xi in batches().items():
+                    want = np.asarray(sample_forest(f1, jnp.asarray(xi)))
+                    r = np.asarray(DF.sample_sharded(
+                        sf, jnp.asarray(xi), mesh=mesh, routed=True))
+                    o = np.asarray(DF.sample_sharded(
+                        sf, jnp.asarray(xi), mesh=mesh, routed=False))
+                    assert np.array_equal(r, want), (D, tag, btag)
+                    assert np.array_equal(o, want), (D, tag, btag)
+                    checked += 1
+        print("ROUTED_OK", checked)
+
+        # structural scaling: each shard descends ~B/D lanes, not B
+        wb = rng.random(4096).astype(np.float32) + np.float32(1e-3)
+        B = 1 << 14
+        xi_bal = jnp.asarray(rng.random(B), jnp.float32)
+        for D in (2, 4, 8):
+            mesh = Mesh(np.array(devs[:D]), ("data",))
+            sf = DF.build_forest_sharded(jnp.asarray(wb), 1024, mesh=mesh)
+            plan = DF.drain_plan(sf, xi_bal, mesh=mesh)
+            assert plan["descent_lanes"] < plan["padded_batch"], (D, plan)
+            assert plan["bucket_capacity"] < plan["lanes_per_shard"], (D, plan)
+            skew_plan = DF.drain_plan(
+                sf, jnp.asarray(np.full(B, 0.999, np.float32)), mesh=mesh)
+            assert skew_plan["bucket_capacity"] == skew_plan["lanes_per_shard"]
+        print("DRAIN_SCALING_OK")
+    """)
+    p = _run(script)
+    assert "ROUTED_OK" in p.stdout, p.stdout[-2000:] + p.stderr[-4000:]
+    assert "DRAIN_SCALING_OK" in p.stdout, p.stdout[-2000:] + p.stderr[-4000:]
 
 
 @pytest.mark.slow
