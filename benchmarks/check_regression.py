@@ -32,8 +32,12 @@ _NUM = re.compile(r"^-?\d+(\.\d+)?([eE][+-]?\d+)?$")
 # and the mixed-size-class drain shape). "bucket" is the routed drain's
 # per-(src,dst) bucket capacity on the forest_sharded_routed_d* rows —
 # deterministic under the fixed bench seed, and the structural witness that
-# each shard descends ~B/D lanes instead of the full batch.
-_PARAMS = frozenset({"n", "m", "devices", "B", "tenants", "classes", "bucket"})
+# each shard descends ~B/D lanes instead of the full batch. "mix" names the
+# size-class mix of the paired coalesced-vs-scatter stream-drain rows (its
+# values are labels, not measurements, so each mix row is structural).
+_PARAMS = frozenset(
+    {"n", "m", "devices", "B", "tenants", "classes", "bucket", "mix"}
+)
 
 
 def line_key(line: str) -> str:

@@ -10,6 +10,10 @@ Sections (CSV; the structure gate pins rows and keys):
   pool_sampling,tenants=...,classes=...  — a ForestPool drain over mixed
       size classes: Q (tenant, uniform) pairs resolved with one batched
       launch per touched class, reported as us per drain and Msamples/s.
+  pool_sampling,mix=...  — the stream-aware drain (device-side QMC counters,
+      ``sample_streams``) per size-class mix, coalesced bucketing pre-pass
+      vs raw scattered lane order. Draws are elementwise identical either
+      way; the paired rows expose what tree-locality buys per mix.
 """
 from __future__ import annotations
 
@@ -92,6 +96,52 @@ def run_sampling(tenants: int = 64, draws: int = 1 << 14):
     return rows
 
 
+_MIXES = {
+    # size -> share of tenants; the serving-shaped sweep coordinates
+    "uniform": {16: 1 / 3, 64: 1 / 3, 256: 1 / 3},
+    "small_heavy": {16: 0.8, 64: 0.15, 256: 0.05},
+    "large_heavy": {16: 0.05, 64: 0.15, 256: 0.8},
+}
+
+
+def run_sampling_mixes(tenants: int = 64, draws: int = 1 << 14):
+    """Stream-aware drain throughput per size-class mix, coalesced vs
+    scattered lane order. One ``DeviceQmcStreams`` pre-pass + one
+    ``forest_sample_batched_streams`` launch per touched class; the
+    ``coalesce`` toggle flips only the kernel's bucketing pre-pass, so the
+    pair isolates what walking per-tree runs buys for each tenant shape."""
+    from repro.serve.sampler import DeviceQmcStreams
+
+    rows = []
+    for mix, shares in _MIXES.items():
+        rng = np.random.default_rng(2)
+        pool = ForestPool()
+        sizes = rng.choice(
+            sorted(shares), size=tenants,
+            p=np.asarray([shares[s] for s in sorted(shares)]),
+        )
+        handles = pool.insert_many([rng.random(s) ** 6 + 1e-9 for s in sizes])
+        qh = [handles[i] for i in rng.integers(0, tenants, draws)]
+        slots = rng.integers(0, tenants, draws)
+        streams = DeviceQmcStreams(tenants, seed=3)
+        for label, coalesce in (("stream_coalesced", True),
+                                ("stream_scatter", False)):
+            t = _time(
+                lambda: pool.sample_streams(
+                    qh, slots, streams, use_pallas=True, coalesce=coalesce
+                ),
+                reps=3,
+            )
+            rows.append(
+                {
+                    "mix": mix, "path": label, "tenants": tenants,
+                    "classes": len(pool.classes),
+                    "us": t * 1e6, "msps": draws / t / 1e6,
+                }
+            )
+    return rows
+
+
 def main_construction() -> list[str]:
     return [
         f"pool_construction,B={r['B']},n={r['n']},"
@@ -103,12 +153,19 @@ def main_construction() -> list[str]:
 
 
 def main_sampling() -> list[str]:
-    return [
+    rows = [
         f"pool_sampling,{r['path']},tenants={r['tenants']},"
         f"classes={r['classes']},us_per_drain={r['us']:.0f},"
         f"Msamples_s={r['msps']:.2f}"
         for r in run_sampling()
     ]
+    rows += [
+        f"pool_sampling,mix={r['mix']},{r['path']},tenants={r['tenants']},"
+        f"classes={r['classes']},us_per_drain={r['us']:.0f},"
+        f"Msamples_s={r['msps']:.2f}"
+        for r in run_sampling_mixes()
+    ]
+    return rows
 
 
 def main() -> list[str]:

@@ -9,7 +9,10 @@ token prior, per-client mixture, per-cell density). The pool packs them
 into power-of-two size-class arenas, builds admission waves with the fused
 batched builder (B distributions, one launch), and resolves a mixed
 ``(tenant, uniform)`` batch with one ``forest_sample_batched`` launch per
-touched size class.
+touched size class. The serving hot path goes one step further: per-slot
+QMC stream state lives on device and a full drain is one stream pre-pass
+plus one coalesced launch per class, with zero host-side bookkeeping
+(section 6).
 """
 import numpy as np
 import jax.numpy as jnp
@@ -73,7 +76,28 @@ try:
 except ValueError:
     print("evicted handle raises; slot recycled with a version bump")
 
-# --- 6. The serving engine's multi-tenant path: prior-backed requests skip
+# --- 6. The stream-aware one-launch drain: serving doesn't hand the pool
+#        host uniforms — per-slot QMC stream state (counters +
+#        Cranley-Patterson offsets) lives ON DEVICE, one jitted pre-pass
+#        ranks duplicate slots and advances every counter, and each touched
+#        size class resolves with a single coalesced kernel launch that
+#        recomputes the stream points in-kernel. Zero host-side counter
+#        bookkeeping; bit-equal to the host QmcStreams oracle.
+from repro.serve.sampler import DeviceQmcStreams, QmcStreams
+
+dev = DeviceQmcStreams(8, seed=42)   # 8 serving slots
+host = QmcStreams(8, seed=42)        # the numpy oracle twin
+slots = rng.integers(0, 8, 512)      # duplicates: best-of-n per slot
+live = [reused if h is handles[3] else h for h in handles]  # 5 evicted [3]
+qh = [live[i] for i in rng.integers(0, len(live), 512)]
+got = pool.sample_streams(qh, slots, dev)            # the hot path
+want = pool.sample(qh, host.next(slots))             # oracle path
+assert np.array_equal(got, want)
+assert np.array_equal(host.counters, np.asarray(dev.counters))
+print("stream-aware drain == host-oracle drain, counters bit-equal "
+      f"({len(set(slots.tolist()))} distinct slots over {len(slots)} draws)")
+
+# --- 7. The serving engine's multi-tenant path: prior-backed requests skip
 #        the model entirely — pure categorical traffic, batched drain per
 #        step (params=None: no LM in the loop).
 eng = ServeEngine(params=None, cfg=None, n_slots=8, max_seq=64,

@@ -19,6 +19,9 @@ from .forest_delta import forest_delta as _forest_delta
 from .forest_delta import forest_delta_update as _forest_delta_update
 from .forest_sample import forest_sample as _forest_sample
 from .forest_sample import forest_sample_batched as _forest_sample_batched
+from .forest_sample import (
+    forest_sample_batched_streams as _forest_sample_batched_streams,
+)
 from .sample_tiled import sample_rows as _sample_rows
 
 
@@ -72,7 +75,7 @@ def forest_sample(forest: RadixForest, xi: jax.Array, use_pallas: bool = True) -
 
 def forest_sample_batched(
     forest, dist_id: jax.Array, xi: jax.Array, use_pallas: bool = True,
-    degenerate: bool | None = None,
+    degenerate: bool | None = None, coalesce: bool = True,
 ) -> jax.Array:
     """Mixed-batch Algorithm 2 over B stacked forests (one launch).
 
@@ -82,7 +85,11 @@ def forest_sample_batched(
     :func:`forest_sample`: side tables ride along only when some row
     actually flagged a cell. Callers that track flagged rows host-side
     (``ForestPool``) pass ``degenerate`` explicitly and spare the serving
-    hot path a blocking device round-trip per drain."""
+    hot path a blocking device round-trip per drain. Lanes with
+    ``dist_id < 0`` are sentinels (padding): resolved to 0 without walking
+    any tree. ``coalesce`` toggles the kernel's bucketing pre-pass (stable
+    sort by owning tree; elementwise identical either way — the jnp
+    reference is order-invariant and ignores it)."""
     if degenerate is None:
         degenerate = bool(jax.device_get(forest.fallback.any()))
     cf = forest.cell_first if degenerate else None
@@ -94,7 +101,37 @@ def forest_sample_batched(
         )
     return _forest_sample_batched(
         forest.cdf, forest.table, forest.left, forest.right, dist_id, xi,
-        cf, fb, interpret=_interpret(),
+        cf, fb, interpret=_interpret(), coalesce=coalesce,
+    )
+
+
+def forest_sample_batched_streams(
+    forest, dist_id: jax.Array, counter: jax.Array, offset_bits: jax.Array,
+    use_pallas: bool = True, degenerate: bool | None = None,
+    coalesce: bool = True,
+):
+    """Stream-aware mixed-batch drain: QMC state in, ``(idx, xi)`` out.
+
+    ``counter`` (Q,) uint32 carries each lane's rank-adjusted stream counter
+    and ``offset_bits`` (Q,) uint32 its slot's 24-bit Cranley-Patterson
+    rotation; the base-2 radical inverse + rotation run device-side (both
+    paths use the exact integer pipeline of ``core.lds``), so a full pool
+    drain needs no host-side uniform generation or counter bookkeeping.
+    Same degenerate/sentinel/coalesce policy as
+    :func:`forest_sample_batched`."""
+    if degenerate is None:
+        degenerate = bool(jax.device_get(forest.fallback.any()))
+    cf = forest.cell_first if degenerate else None
+    fb = forest.fallback if degenerate else None
+    if not use_pallas:
+        return ref.ref_forest_sample_batched_streams(
+            forest.cdf, forest.table, forest.left, forest.right,
+            dist_id, counter, offset_bits, cf, fb,
+        )
+    return _forest_sample_batched_streams(
+        forest.cdf, forest.table, forest.left, forest.right, dist_id,
+        counter, offset_bits, cf, fb, interpret=_interpret(),
+        coalesce=coalesce,
     )
 
 

@@ -65,12 +65,16 @@ def ref_forest_sample_batched(
 ) -> jax.Array:
     """Oracle for kernels.forest_sample.forest_sample_batched: lane q
     descends distribution dist_id[q]'s row with 2-D gathers (same optional
-    degenerate-cell pre-resolution as the kernel)."""
+    degenerate-cell pre-resolution as the kernel). Sentinel lanes
+    (``dist_id < 0``) resolve to 0 without descending — same contract as
+    the kernel, so padded drains stay elementwise comparable."""
     B, m = table.shape
     n = left.shape[1]
-    did = jnp.clip(dist_id.astype(jnp.int32), 0, B - 1)
+    raw = dist_id.astype(jnp.int32)
+    valid = raw >= 0
+    did = jnp.clip(raw, 0, B - 1)
     g = jnp.clip(jnp.floor(xi * jnp.float32(m)).astype(jnp.int32), 0, m - 1)
-    j = table[did, g]
+    j = jnp.where(valid, table[did, g], -1)  # sentinel lanes sit at leaf ~0
 
     if cell_first is not None and fallback is not None:
         flagged = fallback[did, g] & (j >= 0)
@@ -93,6 +97,23 @@ def ref_forest_sample_batched(
         return jnp.where(j >= 0, nxt, j)
 
     return ~jax.lax.fori_loop(0, depth, body, j)
+
+
+def ref_forest_sample_batched_streams(
+    cdf, table, left, right, dist_id, counter, offset_bits,
+    cell_first=None, fallback=None, depth: int = 64,
+):
+    """Oracle for kernels.forest_sample.forest_sample_batched_streams: the
+    same exact 24-bit fixed-point radical-inverse + rotation pipeline
+    (``core.lds.qmc_point``), then the batched descent. Returns
+    ``(idx, xi)`` exactly like the kernel."""
+    from repro.core.lds import qmc_point
+
+    xi = qmc_point(counter, offset_bits)
+    idx = ref_forest_sample_batched(
+        cdf, table, left, right, dist_id, xi, cell_first, fallback, depth
+    )
+    return idx, xi
 
 
 def ref_forest_delta(data: jax.Array, m: int) -> jax.Array:

@@ -24,6 +24,19 @@ scattered back into the stack.
 Zero-padding is sound by the paper's own semantics: padded intervals have
 zero width, so no uniform in [0, 1) ever resolves to one (boundary hits are
 measure-zero and clipped to the tenant's true range on the way out).
+
+Draining comes in two flavors. :meth:`ForestPool.sample` takes host
+uniforms (the differential oracle path). :meth:`ForestPool.sample_streams`
+is the serving hot path: it takes per-draw *slot ids* plus a device-side
+QMC stream object (``DeviceQmcStreams`` protocol: ``draw(slots) -> (ctr,
+offset_bits, xi)``), ranks duplicate slots and advances every counter in
+one jitted pre-pass, then resolves each touched size class with a single
+coalesced ``forest_sample_batched_streams`` launch whose kernel computes
+the stream points in-kernel — a full mixed-size-class drain mutates no
+host-side counter state at all. Both flavors pad drain lanes to
+power-of-two bucket sizes with **sentinel** dist ids (``-1``): a sentinel
+lane resolves to a no-op instead of descending row 0's tree, which after an
+evict holds a freed tenant's stale (fallback-cleared) arrays.
 """
 from __future__ import annotations
 
@@ -273,37 +286,91 @@ class ForestPool:
 
     # ------------------------------------------------------------- sampling
 
-    def sample(self, handles, xi, use_pallas: bool = True) -> np.ndarray:
-        """Bulk mixed-batch drain: draw q resolves ``xi[q]`` in
-        ``handles[q]``'s distribution. One ``forest_sample_batched`` launch
-        per touched size class (the whole point: a thousand tenants over 3
-        classes is 3 launches, not 1000). Results are clipped to each
-        tenant's true range (zero-width padded intervals are measure-zero
-        boundary hits). Returns (Q,) int32 row-local interval indices."""
-        xi = np.asarray(xi, np.float32)
-        if len(handles) != len(xi):
-            raise ValueError("handles and xi must align elementwise")
-        out = np.empty(len(xi), np.int32)
+    def _drain_plan(self, handles) -> dict[int, list[int]]:
+        """Validate handles and group draw indices by touched size class."""
         for h in set(handles):  # validate each distinct handle once
             self._check(h)
         by_class: dict[int, list[int]] = {}
         for q, h in enumerate(handles):
             by_class.setdefault(h.size_class, []).append(q)
-        for size, qs in by_class.items():
+        return by_class
+
+    def _class_lanes(self, handles, qs) -> tuple[np.ndarray, int]:
+        """Per-class lane rows, sentinel-padded (-1) to a pow2 bucket: the
+        padding must never route into row 0 — after an evict that row holds
+        a freed tenant's stale (fallback-cleared) arrays, whose tied chains
+        can run deeper than the kernel's fixed trip count."""
+        qpad = _pow2_at_least(len(qs), 64)  # bucket the drain size too
+        didp = np.full(qpad, -1, np.int32)
+        didp[: len(qs)] = [handles[q].row for q in qs]
+        return didp, qpad
+
+    def _clip_out(self, out, handles, qs, idx) -> None:
+        hi = np.asarray([handles[q].n - 1 for q in qs], np.int64)
+        out[qs] = np.minimum(np.asarray(idx)[: len(qs)], hi).astype(np.int32)
+
+    def sample(self, handles, xi, use_pallas: bool = True,
+               coalesce: bool = True) -> np.ndarray:
+        """Bulk mixed-batch drain from host uniforms: draw q resolves
+        ``xi[q]`` in ``handles[q]``'s distribution. One
+        ``forest_sample_batched`` launch per touched size class (the whole
+        point: a thousand tenants over 3 classes is 3 launches, not 1000).
+        Results are clipped to each tenant's true range (zero-width padded
+        intervals are measure-zero boundary hits). Returns (Q,) int32
+        row-local interval indices. Serving should prefer
+        :meth:`sample_streams`; this is the oracle/compat path."""
+        xi = np.asarray(xi, np.float32)
+        if len(handles) != len(xi):
+            raise ValueError("handles and xi must align elementwise")
+        out = np.empty(len(xi), np.int32)
+        for size, qs in self._drain_plan(handles).items():
             sc = self.classes[size]
-            did = np.asarray([handles[q].row for q in qs], np.int32)
-            u = xi[qs]
-            qpad = _pow2_at_least(len(qs), 64)  # bucket the drain size too
-            didp = np.pad(did, (0, qpad - len(qs)))
-            up = np.pad(u, (0, qpad - len(qs)))
-            idx = np.asarray(ops.forest_sample_batched(
+            didp, qpad = self._class_lanes(handles, qs)
+            up = np.pad(xi[qs], (0, qpad - len(qs)))
+            idx = ops.forest_sample_batched(
                 sc.forest, jnp.asarray(didp), jnp.asarray(up),
-                use_pallas=use_pallas,
+                use_pallas=use_pallas, coalesce=coalesce,
                 # host-side flag bookkeeping spares the drain a device sync
                 degenerate=bool(sc.degenerate_rows),
-            ))[: len(qs)]
-            hi = np.asarray([handles[q].n - 1 for q in qs], np.int64)
-            out[qs] = np.minimum(idx, hi).astype(np.int32)
+            )
+            self._clip_out(out, handles, qs, idx)
+        return out
+
+    def sample_streams(self, handles, slots, streams,
+                       use_pallas: bool = True, coalesce: bool = True,
+                       return_xi: bool = False) -> np.ndarray:
+        """The stream-aware bulk drain: draw q resolves ``slots[q]``'s next
+        QMC stream point in ``handles[q]``'s distribution, with the whole
+        stream side on device. ``streams`` follows the ``DeviceQmcStreams``
+        protocol: ``draw(slots)`` ranks duplicate slots, advances the
+        per-slot counters (functionally, device-side), and hands back the
+        per-lane rank-adjusted counters + offset bits; each touched size
+        class then runs ONE ``forest_sample_batched_streams`` launch that
+        recomputes the points in-kernel and walks coalesced per-tree tiles.
+        Zero host-side counter mutation anywhere on this path. With
+        ``return_xi`` also returns the (Q,) float32 points that were drawn
+        (bit-equal to the host ``QmcStreams`` oracle — differential tests).
+        """
+        slots = np.asarray(slots)
+        if len(handles) != len(slots):
+            raise ValueError("handles and slots must align elementwise")
+        ctr, off, xi = streams.draw(slots)
+        out = np.empty(len(slots), np.int32)
+        for size, qs in self._drain_plan(handles).items():
+            sc = self.classes[size]
+            didp, qpad = self._class_lanes(handles, qs)
+            sel = jnp.asarray(qs, jnp.int32)
+            pad = qpad - len(qs)
+            ctrp = jnp.pad(ctr[sel], (0, pad))
+            offp = jnp.pad(off[sel], (0, pad))
+            idx, _ = ops.forest_sample_batched_streams(
+                sc.forest, jnp.asarray(didp), ctrp, offp,
+                use_pallas=use_pallas, coalesce=coalesce,
+                degenerate=bool(sc.degenerate_rows),
+            )
+            self._clip_out(out, handles, qs, idx)
+        if return_xi:
+            return out, np.asarray(xi)
         return out
 
     # ---------------------------------------------------------- inspection

@@ -170,14 +170,18 @@ class ServeEngine:
                 self.last_tok[s] = tok
                 self.pos[s] += 1
         if prior_slots:
-            # the batched drain: every prior-backed slot in one pool call
+            # the batched drain: every prior-backed slot, one stream-aware
+            # pool call (device-side QMC counters, one launch per size class)
             hs = [self.prior_handles[s] for s in prior_slots]
             toks = self.prior_sampler.sample(hs, np.asarray(prior_slots))
             for i, s in enumerate(prior_slots):
                 tok = int(toks[i])
                 self.slots[s].out.append(tok)
                 self.last_tok[s] = tok
-                self.pos[s] += 1
+                # pos stays frozen at 0: prior slots hold no KV, and pos
+                # doubles as decode_step's scatter index for EVERY row — a
+                # drifting pos would walk a prior slot's writes across (and
+                # eventually past) the max_seq cache budget.
         self._retire()
         self.steps += 1
 

@@ -10,6 +10,17 @@ Modes:
   * ``inverse_rng``  — same mapping, PRNG uniforms (the MC baseline).
   * ``alias``        — Walker/Vose per-row alias tables (serial build, non-
     monotone mapping; the paper's antagonist, kept for comparison).
+
+QMC streams come in a host/device pair sharing ONE exact 24-bit fixed-point
+pipeline (``core.lds.qmc_bits24*``): per-slot counters, Cranley-Patterson
+offsets quantized to the 2^-24 grid, base-2 radical inverse by bit reversal,
+rotation as integer add mod 2^24. :class:`QmcStreams` is the numpy oracle;
+:class:`DeviceQmcStreams` keeps the same state as jax arrays and advances it
+inside one jitted program per drain, so the serving hot path
+(:class:`PooledForestSampler` -> ``ForestPool.sample_streams`` -> the
+stream-aware ``forest_sample_batched_streams`` kernel) mutates no host-side
+bookkeeping at all — and the differential suite asserts the two are
+bit-equal, counters and points, including duplicate slots in one drain.
 """
 from __future__ import annotations
 
@@ -20,17 +31,29 @@ import jax.numpy as jnp
 from repro.core import build_forest, sample_forest
 from repro.core.alias import build_alias, sample_alias
 from repro.core.cdf import normalize_weights, updated_weights
-from repro.core.lds import radical_inverse_base2
+from repro.core.lds import (
+    QMC_SCALE,
+    qmc_bits24_np,
+    qmc_offset_bits_np,
+    qmc_point,
+)
 from repro.kernels import ops
 
 
 class QmcStreams:
     """Per-slot low-discrepancy uniform streams with Cranley-Patterson
-    rotations (slot-hash offsets keep slots decorrelated but stratified)."""
+    rotations (slot-hash offsets keep slots decorrelated but stratified).
+
+    The host-side oracle of the stream pair: pure numpy, one counter per
+    slot, points drawn through the exact fixed-point pipeline shared with
+    :class:`DeviceQmcStreams` (same seed => bit-equal points and counters).
+    Serving hot paths should prefer the device twin; this class remains the
+    reference for differential tests and host-only callers."""
 
     def __init__(self, n_slots: int, seed: int = 0):
         rng = np.random.default_rng(seed)
-        self.offsets = rng.random(n_slots).astype(np.float32)
+        self.offset_bits = qmc_offset_bits_np(rng.random(n_slots))
+        self.offsets = self.offset_bits.astype(np.float32) * QMC_SCALE
         self.counters = np.zeros(n_slots, np.uint32)
 
     def next(self, slots: np.ndarray | None = None) -> np.ndarray:
@@ -41,19 +64,105 @@ class QmcStreams:
         collapse duplicate increments and hand every occurrence the same
         point (identical best-of-n candidates)."""
         if slots is None:
-            slots = np.arange(len(self.offsets))
+            slots = np.arange(len(self.offset_bits))
         slots = np.asarray(slots)
-        order = np.argsort(slots, kind="stable")
-        sorted_slots = slots[order]
-        first = np.searchsorted(sorted_slots, sorted_slots, side="left")
-        rank = np.empty(len(slots), np.uint32)
-        rank[order] = (np.arange(len(slots)) - first).astype(np.uint32)
-        xi = (
-            radical_inverse_base2(self.counters[slots] + rank)
-            + self.offsets[slots]
-        ) % 1.0
+        rank = _occurrence_rank_np(slots)
+        xi = qmc_bits24_np(
+            self.counters[slots] + rank, self.offset_bits[slots]
+        ).astype(np.float32) * QMC_SCALE
         np.add.at(self.counters, slots, 1)
-        return xi.astype(np.float32)
+        return xi
+
+
+def _occurrence_rank_np(slots: np.ndarray) -> np.ndarray:
+    """Per-occurrence rank of each slot within one drain (call order): the
+    j-th occurrence of a slot gets rank j. Stable sort + searchsorted."""
+    order = np.argsort(slots, kind="stable")
+    sorted_slots = slots[order]
+    first = np.searchsorted(sorted_slots, sorted_slots, side="left")
+    rank = np.empty(len(slots), np.uint32)
+    rank[order] = (np.arange(len(slots)) - first).astype(np.uint32)
+    return rank
+
+
+def _pow2_at_least(x: int, floor: int) -> int:
+    p = max(int(floor), 1)
+    while p < x:
+        p <<= 1
+    return p
+
+
+@jax.jit
+def _stream_prepass(counters: jax.Array, offset_bits: jax.Array,
+                    slots: jax.Array):
+    """Device twin of one ``QmcStreams.next`` drain, as a single program:
+    per-occurrence rank (stable sort — identical to the host rank), per-lane
+    rank-adjusted counters + offsets, the drawn points, and the advanced
+    per-slot counters. Sentinel lanes (``slots < 0``, padding so drain
+    shapes bucket to a few compiled programs) draw a dead point and advance
+    nothing."""
+    S = counters.shape[0]
+    valid = slots >= 0
+    # sentinels sort AFTER every real slot so they never perturb real ranks
+    key = jnp.where(valid, slots, S)
+    order = jnp.argsort(key, stable=True)
+    sk = key[order]
+    first = jnp.searchsorted(sk, sk, side="left")
+    rank = jnp.zeros(slots.shape[0], jnp.uint32).at[order].set(
+        (jnp.arange(slots.shape[0]) - first).astype(jnp.uint32)
+    )
+    sl = jnp.where(valid, slots, 0)
+    ctr = jnp.where(valid, counters[sl] + rank, 0).astype(jnp.uint32)
+    off = jnp.where(valid, offset_bits[sl], 0).astype(jnp.uint32)
+    new_counters = counters.at[sl].add(valid.astype(jnp.uint32))
+    return ctr, off, qmc_point(ctr, off), new_counters
+
+
+class DeviceQmcStreams:
+    """Device-side twin of :class:`QmcStreams`: the per-slot counters and
+    Cranley-Patterson offset bits live as jax arrays, and a drain advances
+    them inside :func:`_stream_prepass` — zero host-side counter mutation.
+    Same seed as the host class => bit-equal offsets, counters, and points
+    (both run the exact ``core.lds`` fixed-point pipeline).
+
+    ``draw`` is the pool-facing protocol: it returns the per-lane
+    rank-adjusted ``(counter, offset_bits, xi)`` arrays that thread into the
+    stream-aware drain kernel (which recomputes the very same ``xi``
+    in-kernel). ``next`` matches the host API for standalone callers."""
+
+    def __init__(self, n_slots: int, seed: int = 0):
+        rng = np.random.default_rng(seed)
+        self.offset_bits = jnp.asarray(qmc_offset_bits_np(rng.random(n_slots)))
+        self.counters = jnp.zeros(n_slots, jnp.uint32)
+
+    @property
+    def n_slots(self) -> int:
+        return int(self.offset_bits.shape[0])
+
+    @property
+    def offsets(self) -> np.ndarray:
+        return np.asarray(self.offset_bits).astype(np.float32) * QMC_SCALE
+
+    def draw(self, slots) -> tuple[jax.Array, jax.Array, jax.Array]:
+        """Advance every requested slot occurrence and return the per-lane
+        stream state ``(counter, offset_bits, xi)``, each (Q,) on device.
+        Drain lengths are padded (power-of-two, floor 64, sentinel slots) so
+        churning batch sizes reuse a logarithmic number of programs."""
+        slots = np.asarray(slots)
+        Q = len(slots)
+        qpad = _pow2_at_least(Q, 64)
+        padded = np.full(qpad, -1, np.int32)
+        padded[:Q] = slots.astype(np.int32)
+        ctr, off, xi, self.counters = _stream_prepass(
+            self.counters, self.offset_bits, jnp.asarray(padded)
+        )
+        return ctr[:Q], off[:Q], xi[:Q]
+
+    def next(self, slots: np.ndarray | None = None) -> np.ndarray:
+        """Host-API-compatible drain (returns the points as numpy)."""
+        if slots is None:
+            slots = np.arange(self.n_slots)
+        return np.asarray(self.draw(slots)[2])
 
 
 class ForestSampler:
@@ -127,18 +236,30 @@ class PooledForestSampler:
     distribution, many draws): here every request owns its *own* small
     distribution. ``add`` admits a tenant and returns its stable pool
     :class:`~repro.pool.Handle`; ``sample`` resolves one QMC draw per slot
-    against that slot's distribution with one batched kernel launch per
-    touched size class (the batched drain), instead of a launch per tenant.
-    ``update``/``remove`` re-target and retire tenants in place; slot QMC
-    streams keep their counters across tenant churn, so stratification
-    survives distribution swaps exactly as in :class:`ForestSampler`."""
+    against that slot's distribution through the **stream-aware drain**: the
+    slot streams live device-side (:class:`DeviceQmcStreams`), one jitted
+    pre-pass ranks duplicate slots and advances every counter, and each
+    touched size class resolves its lanes with a single coalesced
+    ``forest_sample_batched_streams`` launch that computes the QMC points
+    in-kernel — no host-side uniform generation or counter bookkeeping on
+    the hot path. ``device_streams=False`` falls back to the host
+    :class:`QmcStreams` oracle path (bit-equal draws; the differential
+    suite pins it). ``update``/``remove`` re-target and retire tenants in
+    place; slot QMC streams keep their counters across tenant churn, so
+    stratification survives distribution swaps exactly as in
+    :class:`ForestSampler`."""
 
     def __init__(self, n_slots: int = 64, seed: int = 0, min_class: int = 8,
-                 m: int | None = None, use_pallas: bool = True):
+                 m: int | None = None, use_pallas: bool = True,
+                 device_streams: bool = True):
         from repro.pool import ForestPool  # lazy: serve stays importable
 
         self.pool = ForestPool(min_class=min_class, m=m)
-        self.streams = QmcStreams(n_slots, seed)
+        self.device_streams = device_streams
+        self.streams = (
+            DeviceQmcStreams(n_slots, seed) if device_streams
+            else QmcStreams(n_slots, seed)
+        )
         self.use_pallas = use_pallas
 
     def add(self, weights):
@@ -159,6 +280,11 @@ class PooledForestSampler:
         """One draw per slot from that slot's tenant distribution — the
         batched drain. ``handles[i]`` pairs with ``slots[i]``'s QMC
         stream."""
+        if self.device_streams:
+            return self.pool.sample_streams(
+                handles, np.asarray(slots), self.streams,
+                use_pallas=self.use_pallas,
+            )
         xi = self.streams.next(np.asarray(slots))
         return self.pool.sample(handles, xi, use_pallas=self.use_pallas)
 

@@ -157,6 +157,38 @@ def test_serve_engine_mixed_model_and_prior_traffic(tiny_lm):
     assert eng.prior_sampler.pool.stats()["tenants"] == 0
 
 
+def test_prior_slot_pos_stays_bounded_alongside_model_traffic(tiny_lm):
+    """Regression: prior-backed slots used to run through the per-step pos
+    increment even though they bypass the model, so a long-lived prior
+    tenant's pos marched past max_seq — and pos doubles as decode_step's KV
+    scatter index for EVERY batch row, so the stale writes walked across
+    (then off) the cache budget. Prior slots' pos must stay frozen at 0
+    while co-batched model traffic advances normally."""
+    cfg, params = tiny_lm
+    rng = np.random.default_rng(8)
+    eng = ServeEngine(params, cfg, n_slots=3, max_seq=16,
+                      sampler=TokenSampler(n_slots=3, use_pallas=False))
+    prior_req = Request(rid=0, prompt=np.zeros(1, np.int64), max_new=40,
+                        prior=rng.random(9) + 1e-3)
+    lm_req = Request(rid=1, prompt=rng.integers(0, cfg.vocab, size=4),
+                     max_new=10)
+    eng.submit(prior_req)
+    eng.submit(lm_req)
+    prior_slot = None
+    for _ in range(60):
+        eng.step()
+        if prior_slot is None and eng.prior_handles:
+            prior_slot = next(iter(eng.prior_handles))
+        if prior_slot is not None and prior_slot in eng.prior_handles:
+            assert eng.pos[prior_slot] == 0
+        assert np.all(eng.pos < eng.max_seq)
+        if prior_req.done and lm_req.done:
+            break
+    # max_new=40 > max_seq=16: only a bounded pos lets the prior finish
+    assert prior_req.done and len(prior_req.out) == 40
+    assert lm_req.done and len(lm_req.out) == 10
+
+
 def test_token_sampler_modes_agree_on_peaked_logits(tiny_lm):
     cfg, _ = tiny_lm
     logits = np.full((3, cfg.vocab), -20.0, np.float32)

@@ -186,6 +186,37 @@ def test_lds_low_discrepancy():
     assert star_discrepancy_1d(np.random.default_rng(0).random(n)) > 0.005
 
 
+def test_sobol_high_dims_distinct_and_nondegenerate():
+    """Regression: dims > 7 used to recycle direction polynomials modulo the
+    table length, silently duplicating coordinate columns (every
+    'independent' pair above dim 7 was perfectly correlated). The extended
+    Joe-Kuo table must give pairwise-distinct columns through dim 16 with
+    non-degenerate 2D projections, and dims past the table must raise."""
+    from repro.core.lds import SOBOL_MAX_DIMS
+
+    n = 256
+    p = sobol(n, 16)
+    assert p.shape == (n, 16)
+    for i in range(16):
+        for j in range(i + 1, 16):
+            assert not np.array_equal(p[:, i], p[:, j]), (i, j)
+            # non-degenerate 2D projection: recycled columns collapsed the
+            # pair onto exactly the 16 diagonal cells of a 16x16 grid;
+            # genuine Sobol pairs here occupy >= 64 cells (some unscrambled
+            # high-dim pairs do sit at that coarse-resolution floor)
+            cells = (np.floor(p[:, i] * 16).astype(int),
+                     np.floor(p[:, j] * 16).astype(int))
+            grid = np.zeros((16, 16), int)
+            np.add.at(grid, cells, 1)
+            assert np.count_nonzero(grid) >= 64, (i, j, np.count_nonzero(grid))
+    # each column is still a (0,1)-sequence in base 2
+    for i in range(16):
+        assert star_discrepancy_1d(p[:, i]) < 0.02, i
+    with pytest.raises(ValueError):
+        sobol(8, SOBOL_MAX_DIMS + 1)
+    assert sobol(8, SOBOL_MAX_DIMS).shape == (8, SOBOL_MAX_DIMS)
+
+
 def test_radical_inverse_exact_float32():
     i = np.arange(1024, dtype=np.uint32)
     x = radical_inverse_base2(i)

@@ -325,6 +325,38 @@ def test_evicting_degenerate_tenant_clears_fallback_tax():
     assert np.all((0 <= out) & (out < 16))
 
 
+def test_padded_drain_lanes_ignore_stale_evicted_row():
+    """Regression: drain padding used to fill the lane batch with dist_id 0,
+    so padding lanes descended whatever row 0 currently held. After a
+    mid-churn evict, row 0 holds a freed tenant's stale arrays (fallback
+    cleared but the tied-chain topology intact) — padded lanes walking it
+    could run past the fixed trip count and return garbage refs. Padding is
+    now the sentinel dist_id -1, which resolves to a no-op leaf without
+    touching any row."""
+    rng = np.random.default_rng(31)
+    pool = ForestPool()
+    # row 0 of the 16-class: a maximally tied tenant (deep degenerate chains)
+    w_tied = np.zeros(16, np.float32)
+    w_tied[5] = 1.0
+    h_tied = pool.insert(w_tied)
+    h_live = pool.insert(rng.random(16) + 1e-3)
+    assert h_tied.row == 0
+    pool.evict(h_tied)  # row 0 is now stale: freed, flags cleared, trees not
+    # a 3-lane drain pads to the 64 bucket -> 61 padding lanes
+    u = rng.random(3).astype(np.float32)
+    for use_pallas in (False, True):
+        out = pool.sample([h_live] * 3, u, use_pallas=use_pallas)
+        want = np.asarray(ops.forest_sample(
+            pool.forest_row(h_live), jnp.asarray(u)))
+        assert np.array_equal(out, np.minimum(want, 15)), use_pallas
+    # same guarantee through the stream-aware drain
+    from repro.serve.sampler import DeviceQmcStreams
+
+    out = pool.sample_streams([h_live] * 3, np.asarray([0, 1, 0]),
+                              DeviceQmcStreams(4, seed=1), use_pallas=True)
+    assert np.all((0 <= out) & (out < 16))
+
+
 def test_engine_prior_request_outlives_kv_budget():
     """max_seq is a KV budget; prior-backed slots hold no KV, so a prior
     request must produce all max_new draws even past max_seq steps."""

@@ -1,0 +1,193 @@
+"""Differential suite for the stream-aware coalesced bulk drain.
+
+The contract under test: the device-side QMC stream state
+(:class:`repro.serve.sampler.DeviceQmcStreams`) is BIT-EQUAL to the host
+:class:`~repro.serve.sampler.QmcStreams` oracle — offsets, counters, and
+points — under duplicate-slot schedules, mixed-size-class drains, and
+tenant churn; and the one-launch drain (``ForestPool.sample_streams`` ->
+``forest_sample_batched_streams``) resolves exactly the draws the host
+path would, with the coalescing pre-pass changing nothing elementwise.
+Fast lane runs on the default backend; the slow lane re-runs the gate
+under 8 fake devices in a subprocess.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.cdf import normalize_weights
+from repro.core.lds import qmc_offset_bits_np
+from repro.kernels import ops
+from repro.pool import ForestPool, build_forest_batched
+from repro.serve.sampler import DeviceQmcStreams, QmcStreams
+
+
+def test_device_streams_bit_equal_host_duplicate_slots():
+    """Counters and points bit-equal across drains with duplicate slots:
+    the j-th occurrence of a slot must advance to counter+j on both sides,
+    and the scatter-add must not collapse duplicate increments."""
+    host = QmcStreams(8, seed=3)
+    dev = DeviceQmcStreams(8, seed=3)
+    assert np.array_equal(host.offset_bits, np.asarray(dev.offset_bits))
+    schedules = [
+        [0, 1, 1, 2, 1, 7],      # one slot thrice in one drain
+        [3, 3, 3, 3],            # a single slot, four occurrences
+        [0, 1, 2, 3, 4, 5, 6, 7],
+        [5],
+        [7, 0, 7, 0, 7],         # interleaved duplicates
+    ]
+    for sl in schedules:
+        sl = np.asarray(sl)
+        xh = host.next(sl)
+        xd = dev.next(sl)
+        assert xh.dtype == np.float32 and xd.dtype == np.float32
+        assert np.array_equal(xh, xd), sl
+        assert np.array_equal(host.counters, np.asarray(dev.counters)), sl
+    # every point is on the 2^-24 grid (the exact fixed-point pipeline)
+    got = host.next(np.arange(8))
+    assert np.array_equal(got, np.float32(got * (1 << 24)) / np.float32(1 << 24))
+
+
+def test_stream_kernel_matches_ref_and_is_order_invariant():
+    """forest_sample_batched_streams: kernel == jnp oracle elementwise
+    (indices AND in-kernel recomputed points), and the coalescing pre-pass
+    (stable sort by owning tree + inverse scatter) changes nothing."""
+    rng = np.random.default_rng(1)
+    W = jnp.asarray(np.stack([
+        normalize_weights(rng.random(24) ** 4 + 1e-9) for _ in range(5)
+    ]))
+    bf = build_forest_batched(W, m=32)
+    Q = 96
+    did = jnp.asarray(rng.integers(0, 5, Q), jnp.int32)
+    ctr = jnp.asarray(rng.integers(0, 1 << 20, Q).astype(np.uint32))
+    off = jnp.asarray(qmc_offset_bits_np(rng.random(Q)))
+    i_ref, x_ref = ops.forest_sample_batched_streams(
+        bf, did, ctr, off, use_pallas=False)
+    for coalesce in (True, False):
+        i_k, x_k = ops.forest_sample_batched_streams(
+            bf, did, ctr, off, use_pallas=True, coalesce=coalesce)
+        assert np.array_equal(np.asarray(i_k), np.asarray(i_ref)), coalesce
+        assert np.array_equal(np.asarray(x_k), np.asarray(x_ref)), coalesce
+
+
+def test_pool_stream_drain_mixed_classes_matches_host_path():
+    """ForestPool.sample_streams over mixed size classes == the host path
+    (QmcStreams.next -> ForestPool.sample) draw for draw, with the device
+    twin's counters tracking the host's bit-for-bit across repeat drains."""
+    rng = np.random.default_rng(7)
+    pool = ForestPool(min_class=8)
+    hs = pool.insert_many([rng.random(n) + 1e-3
+                           for n in (5, 9, 17, 33, 6, 120)])
+    host = QmcStreams(8, seed=11)
+    dev = DeviceQmcStreams(8, seed=11)
+    slots = np.asarray([0, 1, 2, 3, 4, 5, 0, 2])  # duplicates span classes
+    handles = [hs[i % len(hs)] for i in range(len(slots))]
+    for _ in range(4):
+        want_xi = host.next(slots)
+        want = pool.sample(handles, want_xi, use_pallas=False)
+        got, got_xi = pool.sample_streams(
+            handles, slots, dev, use_pallas=True, return_xi=True)
+        assert np.array_equal(got_xi, want_xi)
+        assert np.array_equal(got, want)
+        assert np.array_equal(host.counters, np.asarray(dev.counters))
+
+
+def test_pool_stream_drain_under_churn_bit_equal():
+    """Tenant churn (insert/evict between drains, drifting drain lengths)
+    must leave the device stream state bit-equal to the host oracle: slot
+    counters belong to slots, not tenants, and survive distribution swaps
+    and drain-shape rebucketing."""
+    rng = np.random.default_rng(29)
+    pool_a = ForestPool(min_class=8)
+    pool_b = ForestPool(min_class=8)
+    host = QmcStreams(16, seed=5)
+    dev = DeviceQmcStreams(16, seed=5)
+    live_a, live_b = [], []
+    for step in range(6):
+        # churn: admit a couple, evict one (both pools identically)
+        for _ in range(2):
+            w = rng.random(int(rng.integers(3, 70))) + 1e-3
+            live_a.append(pool_a.insert(w))
+            live_b.append(pool_b.insert(w))
+        if step % 2 and len(live_a) > 2:
+            k = int(rng.integers(0, len(live_a)))
+            pool_a.evict(live_a.pop(k))
+            pool_b.evict(live_b.pop(k))
+        q = int(rng.integers(1, 40))  # drain length drifts across buckets
+        pick = rng.integers(0, len(live_a), q)
+        slots = rng.integers(0, 16, q)
+        want = pool_a.sample([live_a[i] for i in pick], host.next(slots),
+                             use_pallas=False)
+        got = pool_b.sample_streams([live_b[i] for i in pick], slots, dev,
+                                    use_pallas=True)
+        assert np.array_equal(got, want), step
+        assert np.array_equal(host.counters, np.asarray(dev.counters)), step
+
+
+def test_stream_drain_chi_square_coalesced():
+    """GOF through the coalesced stream path: each tenant's share of one
+    bulk stream drain follows its own distribution (chi-square per tenant;
+    the (0,1)-sequence streams are super-uniform, so the generous MC bound
+    holds with room)."""
+    rng = np.random.default_rng(13)
+    pool = ForestPool()
+    ps = [normalize_weights(rng.random(n) ** 2 + 1e-3) for n in (6, 16, 40)]
+    handles = pool.insert_many(ps)
+    per = 1 << 12
+    qh = [h for h in handles for _ in range(per)]
+    slots = np.asarray([t for t in range(len(handles)) for _ in range(per)])
+    dev = DeviceQmcStreams(len(handles), seed=2)
+    out = pool.sample_streams(qh, slots, dev, use_pallas=True)
+    for t, p in enumerate(ps):
+        counts = np.bincount(out[t * per:(t + 1) * per], minlength=len(p))
+        expected = p.astype(np.float64) * per
+        chi2 = float(np.sum(
+            (counts - expected) ** 2 / np.maximum(expected, 1e-9)))
+        assert chi2 < len(p) + 8 * np.sqrt(2 * len(p)), (t, chi2)
+
+
+@pytest.mark.slow
+def test_stream_drain_conformance_8dev():
+    """Slow lane: the whole differential gate again under 8 fake devices —
+    device/host stream bit-equality with duplicates, stream drain vs host
+    path across mixed classes, coalesce on/off identity."""
+    script = textwrap.dedent("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.pool import ForestPool
+        from repro.serve.sampler import DeviceQmcStreams, QmcStreams
+
+        assert jax.device_count() == 8
+        rng = np.random.default_rng(0)
+        host = QmcStreams(8, seed=3)
+        dev = DeviceQmcStreams(8, seed=3)
+        for sl in ([0, 1, 1, 2, 1, 7], [3, 3, 3, 3], [5]):
+            sl = np.asarray(sl)
+            assert np.array_equal(host.next(sl), dev.next(sl))
+            assert np.array_equal(host.counters, np.asarray(dev.counters))
+
+        pool = ForestPool(min_class=8)
+        hs = pool.insert_many([rng.random(n) + 1e-3
+                               for n in (5, 20, 70, 200)])
+        host2 = QmcStreams(8, seed=9)
+        dev2 = DeviceQmcStreams(8, seed=9)
+        qh = [hs[i] for i in rng.integers(0, len(hs), 512)]
+        slots = rng.integers(0, 8, 512)
+        want = pool.sample(qh, host2.next(slots), use_pallas=False)
+        a = pool.sample_streams(qh, slots, dev2, use_pallas=True)
+        assert np.array_equal(a, want)
+        assert np.array_equal(host2.counters, np.asarray(dev2.counters))
+        print("STREAM_CONFORMANCE_OK")
+    """)
+    env = dict(os.environ, PYTHONPATH="src")
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    p = subprocess.run(
+        [sys.executable, "-c", script], capture_output=True, text=True,
+        env=env, cwd=os.getcwd(), timeout=900,
+    )
+    assert "STREAM_CONFORMANCE_OK" in p.stdout, (
+        p.stdout[-2000:] + p.stderr[-4000:]
+    )
