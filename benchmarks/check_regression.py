@@ -35,8 +35,10 @@ _NUM = re.compile(r"^-?\d+(\.\d+)?([eE][+-]?\d+)?$")
 # each shard descends ~B/D lanes instead of the full batch. "mix" names the
 # size-class mix of the paired coalesced-vs-scatter stream-drain rows (its
 # values are labels, not measurements, so each mix row is structural).
+# "method" names the per-slot sampling method of the paired forest-vs-alias
+# pool drain rows — losing either side of the pair IS a missing row.
 _PARAMS = frozenset(
-    {"n", "m", "devices", "B", "tenants", "classes", "bucket", "mix"}
+    {"n", "m", "devices", "B", "tenants", "classes", "bucket", "mix", "method"}
 )
 
 

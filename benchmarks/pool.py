@@ -14,6 +14,13 @@ Sections (CSV; the structure gate pins rows and keys):
       ``sample_streams``) per size-class mix, coalesced bucketing pre-pass
       vs raw scattered lane order. Draws are elementwise identical either
       way; the paired rows expose what tree-locality buys per mix.
+  pool_sampling,method=...  — the SAME tenant set admitted twice, once per
+      sampling method, drained with the same (tenant, uniform) pairs: the
+      paper's tradeoff as paired rows — forest (monotone descent, QMC-safe)
+      vs alias (packed O(1) tables, the bulk PRNG fast path).
+  pool_construction,alias_build_batched,...  — the fused split-and-pack
+      alias build (one kernel launch over B stacked rows) vs a loop of B
+      host ``build_alias_parallel`` calls.
 """
 from __future__ import annotations
 
@@ -24,7 +31,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import build_forest
+from repro.core.alias import build_alias_parallel
 from repro.core.cdf import normalize_weights
+from repro.kernels import ops
 from repro.pool import ForestPool, build_forest_batched
 
 
@@ -54,6 +63,37 @@ def run_construction(batches=(16, 64), n: int = 1024):
             for b in range(B):
                 f = build_forest(Wj[b], n)
             jax.block_until_ready(f.left)
+
+        t_b = _time(batched)
+        t_l = _time(loop)
+        rows.append(
+            {
+                "B": B, "n": n,
+                "batched_us": t_b * 1e6, "loop_us": t_l * 1e6,
+                "speedup": t_l / t_b,
+                "meps": B * n / t_b / 1e6,
+            }
+        )
+    return rows
+
+
+def run_construction_alias(batches=(16, 64), n: int = 1024):
+    """Fused split-and-pack alias build vs a host loop of parallel builds."""
+    rows = []
+    rng = np.random.default_rng(5)
+    for B in batches:
+        W = np.stack([
+            normalize_weights(rng.random(n) ** 8 + 1e-12) for _ in range(B)
+        ]).astype(np.float32)
+        Wj = jnp.asarray(W)
+
+        def batched():
+            q, _ = ops.alias_build_batched(Wj, use_pallas=True)
+            jax.block_until_ready(q)
+
+        def loop():
+            for b in range(B):
+                build_alias_parallel(W[b])
 
         t_b = _time(batched)
         t_l = _time(loop)
@@ -142,14 +182,47 @@ def run_sampling_mixes(tenants: int = 64, draws: int = 1 << 14):
     return rows
 
 
+def run_sampling_methods(tenants: int = 64, draws: int = 1 << 14):
+    """Forest vs alias drains over the SAME tenants and the same (tenant,
+    uniform) pairs — the per-slot method attribute as a paired benchmark.
+    Each pool drains with one launch per touched (method, size class)."""
+    rng = np.random.default_rng(4)
+    sizes = rng.choice([16, 64, 256], size=tenants)
+    tens = [rng.random(s) ** 6 + 1e-9 for s in sizes]
+    qidx = rng.integers(0, tenants, draws)
+    xi = rng.random(draws).astype(np.float32)
+    rows = []
+    for method in ("forest", "alias"):
+        pool = ForestPool()
+        handles = pool.insert_many(tens, method=method)
+        qh = [handles[i] for i in qidx]
+        t = _time(lambda: pool.sample(qh, xi, use_pallas=True), reps=3)
+        rows.append(
+            {
+                "method": method, "tenants": tenants,
+                "classes": len(pool.classes) + len(pool.alias_classes),
+                "us": t * 1e6, "msps": draws / t / 1e6,
+            }
+        )
+    return rows
+
+
 def main_construction() -> list[str]:
-    return [
+    rows = [
         f"pool_construction,B={r['B']},n={r['n']},"
         f"batched_us={r['batched_us']:.0f},loop_us={r['loop_us']:.0f},"
         f"batched_vs_loop={r['speedup']:.2f},"
         f"batched_Mentries_s={r['meps']:.2f}"
         for r in run_construction()
     ]
+    rows += [
+        f"pool_construction,alias_build_batched,B={r['B']},n={r['n']},"
+        f"batched_us={r['batched_us']:.0f},host_loop_us={r['loop_us']:.0f},"
+        f"batched_vs_loop={r['speedup']:.2f},"
+        f"batched_Mentries_s={r['meps']:.2f}"
+        for r in run_construction_alias()
+    ]
+    return rows
 
 
 def main_sampling() -> list[str]:
@@ -164,6 +237,12 @@ def main_sampling() -> list[str]:
         f"classes={r['classes']},us_per_drain={r['us']:.0f},"
         f"Msamples_s={r['msps']:.2f}"
         for r in run_sampling_mixes()
+    ]
+    rows += [
+        f"pool_sampling,method={r['method']},tenants={r['tenants']},"
+        f"classes={r['classes']},us_per_drain={r['us']:.0f},"
+        f"Msamples_s={r['msps']:.2f}"
+        for r in run_sampling_methods()
     ]
     return rows
 

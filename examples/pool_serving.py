@@ -115,3 +115,50 @@ assert all(r.done and len(r.out) == 8 for r in reqs)
 assert all(all(0 <= t < len(r.prior) for t in r.out) for r in reqs)
 print(f"served {len(reqs)} prior-backed requests in {eng.steps} engine steps"
       f" over {eng.n_slots} slots")
+
+# --- 8. Per-tenant sampling method: the paper's forest-vs-alias tradeoff
+#        as a per-slot attribute. Stream-sensitive tenants (QMC best-of-n)
+#        keep the monotone forest descent; bulk PRNG tenants take packed
+#        O(1) alias tables — same pool, same free-list/version machinery,
+#        one mixed drain call, one launch per touched (method, class).
+from repro.core.alias import np_sample_alias_f32
+
+mixed = ForestPool()
+ws = [rng.random(rng.integers(4, 60)) + 1e-3 for _ in range(24)]
+methods = ["forest" if i % 2 == 0 else "alias" for i in range(len(ws))]
+mh = mixed.insert_many(ws, method=methods)
+st = mixed.stats()
+print(f"mixed pool: {len(st['classes'])} forest classes + "
+      f"{len(st['alias_classes'])} alias classes over {st['tenants']} tenants")
+xi = rng.random(len(mh)).astype(np.float32)
+out = mixed.sample(mh, xi)  # ONE call drains both methods
+for i, (h, x) in enumerate(zip(mh, xi)):
+    if h.method == "alias":
+        t = mixed.alias_row(h)
+        want = int(np_sample_alias_f32(
+            np.asarray(t.q), np.asarray(t.alias), np.array([x]))[0])
+        assert out[i] == min(want, h.n - 1)
+print("alias lanes match the O(1) table oracle; forest lanes untouched")
+
+# Serving-side: ``method="auto"`` resolves by stream kind — a PRNG sampler
+# (MC baseline, nothing to protect) admits to alias, a QMC sampler keeps
+# the monotone forest path so the stratification survives.
+prng_sampler = PooledForestSampler(n_slots=8, use_pallas=False,
+                                   streams="prng")
+qmc_sampler = PooledForestSampler(n_slots=8, use_pallas=False)
+print(f"auto under prng streams -> {prng_sampler.add(ws[0]).method}; "
+      f"auto under qmc streams -> {qmc_sampler.add(ws[0]).method}")
+eng2 = ServeEngine(params=None, cfg=None, n_slots=8, max_seq=64,
+                   prior_sampler=prng_sampler)
+reqs2 = [
+    Request(rid=i, prompt=np.zeros(1, np.int64), max_new=4,
+            prior=rng.random(rng.integers(4, 60)) + 1e-3,
+            method=["auto", "forest", "alias"][i % 3])
+    for i in range(12)
+]
+for r in reqs2:
+    eng2.submit(r)
+eng2.run(max_steps=100)
+assert all(r.done and len(r.out) == 4 for r in reqs2)
+assert all(all(0 <= t < len(r.prior) for t in r.out) for r in reqs2)
+print(f"served {len(reqs2)} mixed-method requests in {eng2.steps} steps")

@@ -1,10 +1,24 @@
-"""The Alias Method (Walker 1974/1977, Vose build) — the paper's antagonist.
+"""The Alias Method (Walker 1974/1977, Vose build) — the paper's antagonist,
+now also a first-class serving path.
 
 O(1) worst-case sampling, but the mapping is **non-monotone** (paper Fig. 6):
 warping a low-discrepancy sequence through it destroys uniformity (Figs. 1,
-7-9). The build is inherently serial (two work-list passes), in contrast to
-the parallel prefix-sum + forest build — the paper's Sec. 2.6 point; we keep
-the build in numpy on host and ship the tables to device.
+7-9). That tradeoff is exactly why :class:`repro.pool.ForestPool` carries
+*both* methods per tenant: bulk PRNG traffic drains through packed alias
+tables at memory speed (Lehmann et al. 2021), while QMC/best-of-n tenants
+stay on the monotone radix-forest path. This module holds the
+single-distribution host builds and samplers; the batched device-side
+split-and-pack construction lives in :mod:`repro.kernels.alias_build` and
+the batched drain kernel in :mod:`repro.kernels.alias_sample`.
+
+Sampling edge (the last-cell clamp): a float64 uniform just below 1 rounds
+to exactly ``1.0`` when cast to float32 (probability ~2^-25 per draw — a
+steady trickle at bulk rates), making ``scaled = xi * n`` land on ``n``;
+the clipped cell is ``n-1`` but ``frac = scaled - cell == 1.0``, so the
+``frac < q`` comparison failed unconditionally and the draw took
+``alias[n-1]`` even when the (float32-cast) table says ``q[n-1] == 1.0``
+(all mass in the cell itself). ``frac`` is therefore clamped into
+``[0, 1)``: the limit draw behaves as ``xi -> 1^-`` at table resolution.
 """
 from __future__ import annotations
 
@@ -13,6 +27,11 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+# Largest float32 / float64 strictly below 1: the upper clamp for the
+# within-cell fraction, so `frac < q` stays meaningful for q == 1 cells.
+ALIAS_FRAC_MAX = np.float32(np.nextafter(np.float32(1.0), np.float32(0.0)))
+_ALIAS_FRAC_MAX64 = np.nextafter(1.0, 0.0)
 
 
 class AliasTable(NamedTuple):
@@ -43,8 +62,8 @@ def build_alias(weights: np.ndarray) -> AliasTable:
 
 def build_alias_parallel(weights) -> AliasTable:
     """Data-parallel alias construction (beyond-paper: the paper notes that
-    known alias builds are serial — this one is prefix sums + two
-    searchsorteds, O(n log n) work, O(log n) depth, fully vectorizable).
+    known alias builds are serial — this one is prefix sums + searchsorteds,
+    O(n log n) work, O(log n) depth, fully vectorizable).
 
     Geometric formulation: scale to np_i = n*p_i; lights (np<1) demand
     deficits on a tape (prefix D), heavies supply surpluses (prefix S).
@@ -52,8 +71,15 @@ def build_alias_parallel(weights) -> AliasTable:
         START of j's demand interval (D_{j-1});
       * heavy k:  its supply ends at S_k inside some light j(k)'s demand
         interval -> the heavy goes into debt d = D_{j(k)} - S_k, which the
-        NEXT heavy covers: q = 1 - d, alias = h_{k+1}; past the last light
-        boundary q = 1.
+        next heavy *with remaining surplus* covers: q = 1 - d, alias = that
+        heavy; past the last light boundary q = 1.
+    Boundary handling matters with exact (dyadic) weights: a heavy with
+    np_k == 1 supplies a zero-width interval, so its supply "end" can land
+    exactly on a demand boundary without the heavy having covered anything —
+    such heavies owe no debt (``surplus > 0`` gates the debt), and a real
+    debt is routed past any zero-surplus run to the first heavy whose prefix
+    strictly exceeds S_k (``searchsorted(S, S_k, side="right")``, the same
+    rule the lights use, rather than the positional ``k+1``).
     Validity is a telescoping mass argument (each item ends with exactly
     np_i across its own cell + cells aliasing it), property-tested exactly
     in tests; the pairing differs from Vose's FIFO but any valid table gives
@@ -72,19 +98,26 @@ def build_alias_parallel(weights) -> AliasTable:
         D = np.cumsum(1.0 - npi[lights])          # demand prefix
         S = np.cumsum(npi[heavies] - 1.0)         # supply prefix
         total = min(D[-1], S[-1])                 # equal up to rounding
-        # lights: alias = heavy covering the demand start
+        # lights: alias = heavy covering the demand start (side="right"
+        # skips every heavy whose supply is exhausted at the boundary,
+        # including zero-surplus heavies whose interval is empty)
         starts = np.concatenate([[0.0], D[:-1]])
         k = np.clip(np.searchsorted(S, starts, side="right"), 0, len(heavies) - 1)
         q[lights] = npi[lights]
         alias[lights] = heavies[k]
-        # heavies: debt to the next heavy where supply ends mid-demand
+        # heavies: debt to the next supplying heavy where supply ends
+        # mid-demand; zero-surplus heavies (np_k == 1 exactly) supplied
+        # nothing, so a boundary coincidence must not charge them
+        surplus = npi[heavies] - 1.0
         x = S  # supply end per heavy
         j = np.searchsorted(D, x, side="left")    # light whose interval has x
-        inside = (j < len(D)) & (x < total)
+        inside = (j < len(D)) & (x < total) & (surplus > 0.0)
         Dj = D[np.clip(j, 0, len(D) - 1)]
         debt = np.where(inside, Dj - x, 0.0)
         debt = np.clip(debt, 0.0, 1.0)
-        nxt = np.minimum(np.arange(len(heavies)) + 1, len(heavies) - 1)
+        # the covering heavy is the first with prefix strictly past S_k —
+        # positional k+1 would hand the debt to a zero-surplus heavy
+        nxt = np.clip(np.searchsorted(S, x, side="right"), 0, len(heavies) - 1)
         q[heavies] = 1.0 - debt
         alias[heavies] = np.where(
             debt > 0, heavies[nxt], heavies
@@ -93,17 +126,41 @@ def build_alias_parallel(weights) -> AliasTable:
 
 
 def sample_alias(t: AliasTable, xi: jax.Array) -> jax.Array:
-    """One load of (q, alias) + one comparison; non-monotone in xi."""
+    """One load of (q, alias) + one comparison; non-monotone in xi.
+
+    ``frac`` is clamped into [0, 1): ``xi == 1.0`` (a float64 uniform just
+    below 1, rounded up by the f32 cast) must behave as the limit draw
+    ``xi -> 1^-`` — without the clamp ``frac == 1.0 >= q`` took the alias
+    unconditionally, even in cells whose table says q == 1."""
     n = t.q.shape[0]
     scaled = xi * jnp.float32(n)
     cell = jnp.clip(scaled.astype(jnp.int32), 0, n - 1)
-    frac = scaled - cell.astype(jnp.float32)
+    frac = jnp.clip(scaled - cell.astype(jnp.float32), 0.0, ALIAS_FRAC_MAX)
     return jnp.where(frac < t.q[cell], cell, t.alias[cell]).astype(jnp.int32)
 
 
 def np_sample_alias(q: np.ndarray, alias: np.ndarray, xi: np.ndarray) -> np.ndarray:
+    """Host twin of :func:`sample_alias` in float64 (the bench baseline).
+
+    Same last-cell clamp: the int64 truncation of ``scaled`` is exact for
+    any realistic n, but ``xi == 1.0`` still lands ``scaled`` on ``n`` and
+    the clipped cell would see ``frac == 1.0``."""
     n = len(q)
     scaled = np.asarray(xi, np.float64) * n
     cell = np.clip(scaled.astype(np.int64), 0, n - 1)
-    frac = scaled - cell
+    frac = np.clip(scaled - cell, 0.0, _ALIAS_FRAC_MAX64)
     return np.where(frac < q[cell], cell, alias[cell])
+
+
+def np_sample_alias_f32(q: np.ndarray, alias: np.ndarray,
+                        xi: np.ndarray) -> np.ndarray:
+    """Numpy oracle mirroring the device drain's float32 arithmetic exactly
+    (same multiply, truncation, and clamp — IEEE f32 on both sides), so the
+    batched alias kernel can be asserted **elementwise** against it."""
+    n = len(q)
+    scaled = np.asarray(xi, np.float32) * np.float32(n)
+    cell = np.clip(scaled.astype(np.int32), 0, n - 1)
+    frac = np.clip(scaled - cell.astype(np.float32),
+                   np.float32(0.0), ALIAS_FRAC_MAX)
+    return np.where(frac < np.asarray(q, np.float32)[cell],
+                    cell, alias[cell]).astype(np.int32)

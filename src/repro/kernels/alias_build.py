@@ -1,0 +1,179 @@
+"""Batched split-and-pack alias construction: B tables in one launch.
+
+The paper notes that known alias-table builds are serial; the pool's
+admission waves need thousands of small tables built concurrently. This
+kernel vectorizes :func:`repro.core.alias.build_alias_parallel`'s geometric
+formulation over a stacked ``(B, n)`` weight matrix — the construction twin
+of ``pool/batched.py``'s fused forest build, feeding the packed
+:class:`~repro.pool.batched.BatchedAlias` arenas that Lehmann et al. (2021)
+show batched GPU sampling wants.
+
+The formulation is **positional**, which is what makes it kernel-shaped:
+instead of compacting lights/heavies onto separate tapes (a scatter), the
+demand/supply prefixes are cumsums of *masked* per-cell terms over the
+original cell order, then pinned bit-flat between member cells by an
+exactly-associative ``cummax`` over member-only values (XLA's cumsum is a
+reassociated parallel scan, so a raw positional prefix can wobble by 1 ulp
+across a ``+0.0`` term). Because the pinned tapes only increase at member
+cells, a binary search over them lands directly on the ORIGINAL index of
+the covering heavy. The whole build is then two cumsums, two cummaxes,
+three fixed-trip binary searches, and elementwise selects: no scatter, no
+sort, no data-dependent shapes.
+
+Boundary policy matches the fixed host build exactly: zero-surplus heavies
+(``n*p == 1``) supply an empty interval, owe no debt (``surplus > 0``
+gates it), and are skipped by the strictly-greater searches, so exact
+dyadic weights — where supply ends coincide with demand boundaries — pack
+without breaking the telescoping-mass invariant. The jnp reference
+(:func:`repro.kernels.ref.ref_alias_build_batched`) calls the SAME row
+core, so kernel/ref agreement is structural, and the dyadic differential
+tests additionally pin both against ``build_alias_parallel`` row by row.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Fixed trip count for the branchless binary searches (covers any n < 2^32;
+# same convention as the forest kernels' 32-trip bisection).
+_SEARCH_TRIPS = 32
+
+
+def _row_searchsorted(a: jax.Array, v: jax.Array, strict: bool) -> jax.Array:
+    """Per-row ``searchsorted`` with flat row-offset gathers, branchless.
+
+    ``a`` (R, n) row-wise sorted, ``v`` (R, n) query per element -> (R, n)
+    int32 in [0, n]: the first in-row position where ``a > v`` (``strict``,
+    numpy's side="right") or ``a >= v`` (side="left"). Fixed ``fori_loop``
+    trips with ``lo < hi``-guarded updates, so it is Pallas-safe and
+    bit-exact against numpy (pure comparisons, no arithmetic on values)."""
+    R, n = a.shape
+    a_flat = a.reshape(-1)
+    base = (jnp.arange(R, dtype=jnp.int32) * n)[:, None]
+    lo = jnp.zeros(v.shape, jnp.int32)
+    hi = jnp.full(v.shape, n, jnp.int32)
+
+    def body(_, state):
+        lo, hi = state
+        active = lo < hi
+        mid = (lo + hi) >> 1
+        am = jnp.take(a_flat, base + jnp.minimum(mid, n - 1))
+        go_right = (am <= v) if strict else (am < v)
+        nlo = jnp.where(go_right, mid + 1, lo)
+        nhi = jnp.where(go_right, hi, mid)
+        return jnp.where(active, nlo, lo), jnp.where(active, nhi, hi)
+
+    lo, _ = jax.lax.fori_loop(0, _SEARCH_TRIPS, body, (lo, hi))
+    return lo
+
+
+def _row_take(a: jax.Array, idx: jax.Array) -> jax.Array:
+    """Row-local gather via flat offsets (the packed-table idiom)."""
+    R, n = a.shape
+    base = (jnp.arange(R, dtype=jnp.int32) * n)[:, None]
+    return jnp.take(a.reshape(-1), base + idx)
+
+
+def alias_split_pack_rows(w: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """The shared build core: (R, n) weights -> ``(q, alias)`` (R, n) rows.
+
+    Both the Pallas kernel body and the jnp reference run THIS function, so
+    their agreement is structural. Rows are independent; zero-weight cells
+    (the pool's padding) become full-deficit lights with ``q == 0`` — no
+    draw ever resolves own-side in one, and they are never heavy so never
+    an alias target — so padded cells are unreachable, exactly like the
+    forest arena's zero-width intervals."""
+    R, n = w.shape
+    pos = jnp.arange(n, dtype=jnp.int32)[None, :]
+    wsum = jnp.sum(w, axis=-1, keepdims=True)
+    npi = w / wsum * jnp.float32(n)
+    light = npi < 1.0
+    heavy = ~light
+    dvals = jnp.where(light, 1.0 - npi, 0.0)   # per-cell demand (lights)
+    svals = jnp.where(heavy, npi - 1.0, 0.0)   # per-cell surplus (heavies)
+    D = jnp.cumsum(dvals, axis=-1)             # positional demand prefix
+    S = jnp.cumsum(svals, axis=-1)             # positional supply prefix
+    # Pin tape flatness between member cells: XLA's cumsum is a reassociated
+    # parallel scan, so the prefix can wobble by 1 ulp across a +0.0 term —
+    # enough for a strict search to land on a NON-member position (a heavy's
+    # debt aliased to a light). max is exactly associative, so propagating
+    # each member's own prefix with a cummax makes flat segments bit-flat by
+    # construction; member positions keep their own cumsum value.
+    ninf = jnp.float32(-jnp.inf)
+    D = jax.lax.cummax(jnp.where(light, D, ninf), axis=1)
+    S = jax.lax.cummax(jnp.where(heavy, S, ninf), axis=1)
+    total = jnp.minimum(D[:, -1:], S[:, -1:])
+    has_both = jnp.any(light, axis=-1, keepdims=True) & jnp.any(
+        heavy, axis=-1, keepdims=True
+    )
+    last_heavy = jnp.maximum(
+        jnp.max(jnp.where(heavy, pos, -1), axis=-1, keepdims=True), 0
+    )
+
+    # lights: alias = the heavy whose supply interval contains the START of
+    # the light's demand interval. The positional prefix only increases at
+    # positive-surplus heavies, so the first strictly-greater position IS
+    # that heavy's original index (zero-surplus heavies never cross).
+    p_light = _row_searchsorted(S, D - dvals, strict=True)
+    alias_light = jnp.where(p_light < n, jnp.minimum(p_light, n - 1), last_heavy)
+
+    # heavies: where a heavy's own supply ends inside a light's demand
+    # interval it owes the remainder (debt) to the next supplying heavy.
+    x = S
+    pj = _row_searchsorted(D, x, strict=False)
+    inside = (pj < n) & (x < total) & (svals > 0.0)
+    Dj = _row_take(D, jnp.minimum(pj, n - 1))
+    debt = jnp.clip(jnp.where(inside, Dj - x, 0.0), 0.0, 1.0)
+    p_nxt = _row_searchsorted(S, x, strict=True)
+    nxt = jnp.where(p_nxt < n, jnp.minimum(p_nxt, n - 1), last_heavy)
+    alias_heavy = jnp.where(debt > 0.0, nxt, pos)
+
+    q = jnp.where(light, npi, 1.0 - debt)
+    alias = jnp.where(light, alias_light, alias_heavy)
+    # rows without both sides (exactly uniform, or single-sided rounding)
+    # are already exact: the identity table
+    q = jnp.where(has_both, q, jnp.ones_like(q))
+    alias = jnp.where(has_both, alias, jnp.broadcast_to(pos, alias.shape))
+    return q.astype(jnp.float32), alias.astype(jnp.int32)
+
+
+def _alias_build_kernel(w_ref, q_ref, a_ref):
+    q, a = alias_split_pack_rows(w_ref[...])
+    q_ref[...] = q
+    a_ref[...] = a
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def alias_build_batched(
+    weights: jax.Array, block_b: int = 8, interpret: bool = True
+) -> tuple[jax.Array, jax.Array]:
+    """(B, n) stacked weights -> packed ``(q, alias)`` (B, n) f32/i32 stacks.
+
+    Grid over row blocks; each program instance packs ``block_b`` whole
+    rows from VMEM (rows are independent, so blocking cannot change bits).
+    The batch is padded with uniform rows to a ``block_b`` multiple and
+    trimmed on the way out."""
+    B, n = weights.shape
+    Bp = (B + block_b - 1) // block_b * block_b
+    wp = jnp.pad(
+        jnp.asarray(weights, jnp.float32), ((0, Bp - B), (0, 0)),
+        constant_values=1.0,  # padding rows: uniform => identity tables
+    )
+    q, a = pl.pallas_call(
+        _alias_build_kernel,
+        grid=(Bp // block_b,),
+        in_specs=[pl.BlockSpec((block_b, n), lambda i: (i, 0))],
+        out_specs=(
+            pl.BlockSpec((block_b, n), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, n), lambda i: (i, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((Bp, n), jnp.float32),
+            jax.ShapeDtypeStruct((Bp, n), jnp.int32),
+        ),
+        interpret=interpret,
+    )(wp)
+    return q[:B], a[:B]

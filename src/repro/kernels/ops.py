@@ -14,6 +14,8 @@ import jax.numpy as jnp
 from repro.core.forest import RadixForest
 
 from . import ref
+from .alias_build import alias_build_batched as _alias_build_batched
+from .alias_sample import alias_sample_batched as _alias_sample_batched
 from .cdf_scan import cdf_scan as _cdf_scan
 from .forest_delta import forest_delta as _forest_delta
 from .forest_delta import forest_delta_update as _forest_delta_update
@@ -131,6 +133,41 @@ def forest_sample_batched_streams(
     return _forest_sample_batched_streams(
         forest.cdf, forest.table, forest.left, forest.right, dist_id,
         counter, offset_bits, cf, fb, interpret=_interpret(),
+        coalesce=coalesce,
+    )
+
+
+def alias_build_batched(
+    weights: jax.Array, use_pallas: bool = True
+) -> tuple[jax.Array, jax.Array]:
+    """Batched split-and-pack alias construction: (B, n) stacked weights ->
+    packed ``(q, alias)`` (B, n) stacks, one fused program. Rows with mixed
+    lights/heavies pack via the positional prefix formulation; exactly
+    uniform rows come back as identity tables. Both paths run the same row
+    core, so they are bit-identical by construction."""
+    if not use_pallas:
+        return ref.ref_alias_build_batched(weights)
+    return _alias_build_batched(weights, interpret=_interpret())
+
+
+def alias_sample_batched(
+    table, dist_id: jax.Array, xi: jax.Array, use_pallas: bool = True,
+    coalesce: bool = True,
+) -> jax.Array:
+    """Mixed-batch alias drain over B stacked tables (one launch).
+
+    ``table`` is any object with stacked ``q`` (B, n) f32 / ``alias``
+    (B, n) i32 fields (``repro.pool.batched.BatchedAlias``; duck-typed so
+    the kernel layer never imports the pool layer). O(1) per lane — two
+    gathers and a comparison — which is why PRNG tenants route here; the
+    mapping is non-monotone, so QMC tenants must not. Lanes with
+    ``dist_id < 0`` are sentinels (padding) resolved to 0; ``coalesce``
+    toggles the stable sort-by-row bucketing pre-pass (elementwise
+    identical either way)."""
+    if not use_pallas:
+        return ref.ref_alias_sample_batched(table.q, table.alias, dist_id, xi)
+    return _alias_sample_batched(
+        table.q, table.alias, dist_id, xi, interpret=_interpret(),
         coalesce=coalesce,
     )
 

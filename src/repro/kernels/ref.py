@@ -116,6 +116,37 @@ def ref_forest_sample_batched_streams(
     return idx, xi
 
 
+def ref_alias_build_batched(weights: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Oracle for kernels.alias_build.alias_build_batched: literally the
+    same positional split-and-pack row core (rows are independent, so the
+    kernel's row blocking cannot change bits — agreement is structural)."""
+    from repro.kernels.alias_build import alias_split_pack_rows
+
+    return alias_split_pack_rows(jnp.asarray(weights, jnp.float32))
+
+
+def ref_alias_sample_batched(
+    q: jax.Array, alias: jax.Array, dist_id: jax.Array, xi: jax.Array
+) -> jax.Array:
+    """Oracle for kernels.alias_sample.alias_sample_batched: same float32
+    arithmetic (scale, truncate, clamp into [0, 1), one comparison) with
+    2-D gathers. Sentinel lanes (``dist_id < 0``) resolve to 0 without
+    touching any row — same contract as the kernel."""
+    from repro.core.alias import ALIAS_FRAC_MAX
+
+    B, n = q.shape
+    raw = dist_id.astype(jnp.int32)
+    valid = raw >= 0
+    did = jnp.clip(raw, 0, B - 1)
+    scaled = xi * jnp.float32(n)
+    cell = jnp.clip(scaled.astype(jnp.int32), 0, n - 1)
+    frac = jnp.clip(
+        scaled - cell.astype(jnp.float32), 0.0, jnp.float32(ALIAS_FRAC_MAX)
+    )
+    out = jnp.where(frac < q[did, cell], cell, alias[did, cell])
+    return jnp.where(valid, out, 0).astype(jnp.int32)
+
+
 def ref_forest_delta(data: jax.Array, m: int) -> jax.Array:
     """Oracle for kernels.forest_delta.forest_delta. Cells are clipped to
     [0, m-1] exactly like core.forest._cells, so the crossing mask is the

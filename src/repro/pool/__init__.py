@@ -1,18 +1,27 @@
-"""Batched radix-forest pools: fused multi-distribution construction,
-size-class arenas, and bulk mixed-batch sampling for multi-tenant serving."""
-from .arena import ForestPool, Handle
+"""Batched sampling pools: fused multi-distribution construction (radix
+forests and packed alias tables), size-class arenas, and bulk mixed-batch
+sampling for multi-tenant serving — with the sampling method (monotone
+forest vs O(1) alias) a per-tenant attribute."""
+from .arena import AliasArena, ForestPool, Handle
 from .batched import (
+    BatchedAlias,
     BatchedForest,
+    build_alias_batched,
     build_forest_batched,
     build_forest_batched_from_cdf,
+    sample_alias_batched,
     sample_forest_batched,
 )
 
 __all__ = [
+    "AliasArena",
+    "BatchedAlias",
     "BatchedForest",
     "ForestPool",
     "Handle",
+    "build_alias_batched",
     "build_forest_batched",
     "build_forest_batched_from_cdf",
+    "sample_alias_batched",
     "sample_forest_batched",
 ]

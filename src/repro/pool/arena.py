@@ -1,42 +1,54 @@
-"""Size-class forest arenas: many variable-n tenants, few compiled programs.
+"""Size-class arenas with per-tenant sampling *method*: many variable-n
+tenants, few compiled programs, two drain paths.
 
 The multi-tenant serving problem: thousands of clients each own a *small*
 categorical of a *different* size, churning (insert / re-weight / evict) at
 request rate. Naively that is one compiled build + one compiled sampler per
 distinct ``n`` — a recompile storm. :class:`ForestPool` packs tenants into
-**power-of-two size classes** (weights zero-padded to the class size, guide
-resolution fixed per class), so every tenant in a class shares the same
-stacked :class:`~repro.pool.batched.BatchedForest` arrays and the same
-handful of compiled programs: one fused batched build per (rows, size), one
-batched sampling launch per (size, batch) — regardless of how many tenants
-come and go.
+**power-of-two size classes** (weights zero-padded to the class size), so
+every tenant in a class shares the same stacked arrays and the same handful
+of compiled programs — regardless of how many tenants come and go.
 
-Slot lifecycle: :meth:`ForestPool.insert` hands out a stable
-:class:`Handle` (size class, row, true ``n``, version). Rows are recycled
-through a **free list**; every recycle bumps the row's **version counter**,
-so a stale handle (evicted tenant, reused slot) raises instead of silently
-sampling someone else's distribution. :meth:`ForestPool.update_weights`
-re-targets a tenant in place, routing the Algorithm-1 re-work through
-:mod:`repro.kernels.forest_delta`: a bit-identical CDF skips the rebuild
-entirely, otherwise the new separator distances feed a single-row rebuild
-scattered back into the stack.
+Each tenant now also declares HOW it is sampled (the paper's central
+tradeoff, made a per-slot attribute):
 
-Zero-padding is sound by the paper's own semantics: padded intervals have
-zero width, so no uniform in [0, 1) ever resolves to one (boundary hits are
-measure-zero and clipped to the tenant's true range on the way out).
+* ``method="forest"`` — the monotone radix-forest map
+  (:class:`~repro.pool.batched.BatchedForest` stacks, ``_SizeClass``
+  arenas). Preserves QMC stratification; this is the path for
+  stream-sensitive tenants (best-of-n decode, stratified sweeps) and the
+  default.
+* ``method="alias"`` — packed Walker/Vose tables
+  (:class:`~repro.pool.batched.BatchedAlias` stacks, :class:`AliasArena`
+  arenas) built by the fused split-and-pack kernel. O(1) per draw, ~100x
+  the forest drain's bulk throughput, but a **non-monotone** map that
+  destroys low-discrepancy structure — for bulk PRNG tenants only.
 
-Draining comes in two flavors. :meth:`ForestPool.sample` takes host
-uniforms (the differential oracle path). :meth:`ForestPool.sample_streams`
-is the serving hot path: it takes per-draw *slot ids* plus a device-side
-QMC stream object (``DeviceQmcStreams`` protocol: ``draw(slots) -> (ctr,
-offset_bits, xi)``), ranks duplicate slots and advances every counter in
-one jitted pre-pass, then resolves each touched size class with a single
-coalesced ``forest_sample_batched_streams`` launch whose kernel computes
-the stream points in-kernel — a full mixed-size-class drain mutates no
-host-side counter state at all. Both flavors pad drain lanes to
-power-of-two bucket sizes with **sentinel** dist ids (``-1``): a sentinel
-lane resolves to a no-op instead of descending row 0's tree, which after an
-evict holds a freed tenant's stale (fallback-cleared) arrays.
+Both arena kinds share one slot-lifecycle machine (:class:`_Arena`):
+:meth:`ForestPool.insert` hands out a stable :class:`Handle` (size class,
+row, true ``n``, version, method). Rows are recycled through a **free
+list**; every recycle bumps the row's **version counter**, so a stale
+handle (evicted tenant, reused slot) raises instead of silently sampling
+someone else's distribution. :meth:`ForestPool.update_weights` re-targets
+a tenant in place — forest rows route the Algorithm-1 re-work through
+:mod:`repro.kernels.forest_delta` (a bit-identical CDF skips the rebuild),
+alias rows re-pack (a bit-identical padded weight row skips). Eviction
+clears the freed row's arena state (fallback flags on the forest side, the
+packed table row on the alias side).
+
+Zero-padding is sound on both paths: padded forest intervals have zero
+width, and padded alias cells are full-deficit lights with ``q == 0`` that
+are never an alias target — no uniform in [0, 1) ever resolves to either.
+
+Draining groups draws by ``(method, size class)`` and issues ONE batched
+kernel launch per touched group — ``forest_sample_batched`` /
+``alias_sample_batched``, or their stream-aware forms under
+:meth:`ForestPool.sample_streams`, where per-slot QMC stream state lives
+on device (``DeviceQmcStreams`` protocol: ``draw(slots) -> (ctr,
+offset_bits, xi)``); forest groups recompute the stream points in-kernel,
+alias groups consume the pre-pass points (QMC tenants should stay on the
+forest path — serving's ``auto`` method does exactly that). All lanes pad
+to power-of-two buckets with **sentinel** dist ids (``-1``): a sentinel
+lane resolves to a no-op instead of reading a freed row's stale arrays.
 """
 from __future__ import annotations
 
@@ -53,19 +65,25 @@ from repro.core.cdf import (
     normalize_weights,
     updated_weights,
 )
+from repro.core.alias import AliasTable
 from repro.core.forest import RadixForest, forest_from_cdf
 from repro.kernels import ops
 
-from .batched import BatchedForest, build_forest_batched
+from .batched import BatchedAlias, BatchedForest, build_forest_batched
+
+METHODS = ("forest", "alias")
 
 
 class Handle(NamedTuple):
-    """Stable tenant reference: which class/row, how big, which lifetime."""
+    """Stable tenant reference: which class/row, how big, which lifetime,
+    and which sampling method its row lives under (``method`` keys the
+    arena kind — a forest handle can never resolve against an alias row)."""
 
     size_class: int  # padded n (power of two) — the class key
     row: int         # row in the class's stacked arrays
     n: int           # true (unpadded) distribution size
     version: int     # row lifetime counter; mismatch => stale handle
+    method: str = "forest"  # "forest" (monotone) | "alias" (O(1), PRNG-only)
 
 
 def _pow2_at_least(x: int, floor: int) -> int:
@@ -75,27 +93,84 @@ def _pow2_at_least(x: int, floor: int) -> int:
     return p
 
 
-class _SizeClass:
-    """One stacked arena: all tenants padded to ``size`` leaves."""
+class _Arena:
+    """The shared size-class slot machine: pow2-padded rows, free-list
+    recycling, per-row version counters, raw-weight shadow copies. Payload
+    storage (forest stacks vs packed alias stacks) is the subclass's
+    business via :meth:`_grow_payload`."""
 
-    def __init__(self, size: int, m: int, init_rows: int):
+    def __init__(self, size: int, init_rows: int):
         self.size = size
-        self.m = m
         self.rows = init_rows
-        self.forest: BatchedForest | None = None  # allocated on first build
         self.n_true = np.zeros(init_rows, np.int64)
         self.versions = np.zeros(init_rows, np.int64)
         self.free: list[int] = list(range(init_rows - 1, -1, -1))
         self.raw: dict[int, np.ndarray] = {}  # row -> float64 raw weights
-        self.degenerate_rows: set[int] = set()  # rows with flagged cells
         self.builds = 0
-        self.delta_rebuilds = 0
-        self.delta_skips = 0
         self.grows = 0
 
     @property
     def occupied(self) -> int:
         return self.rows - len(self.free)
+
+    def _grow_payload(self, extra: int) -> None:
+        raise NotImplementedError
+
+    def grow(self) -> None:
+        extra = self.rows
+        self.free.extend(range(self.rows + extra - 1, self.rows - 1, -1))
+        self._grow_payload(extra)
+        self.n_true = np.concatenate([self.n_true, np.zeros(extra, np.int64)])
+        self.versions = np.concatenate([self.versions, np.zeros(extra, np.int64)])
+        self.rows += extra
+        self.grows += 1
+
+    def take_row(self) -> int:
+        if not self.free:
+            self.grow()
+        return self.free.pop()
+
+
+class _SizeClass(_Arena):
+    """One stacked forest arena: all tenants padded to ``size`` leaves."""
+
+    def __init__(self, size: int, m: int, init_rows: int):
+        super().__init__(size, init_rows)
+        self.m = m
+        self.forest: BatchedForest | None = None  # allocated on first build
+        self.degenerate_rows: set[int] = set()  # rows with flagged cells
+        self.delta_rebuilds = 0
+        self.delta_skips = 0
+
+    def _grow_payload(self, extra: int) -> None:
+        if self.forest is not None:
+            pad = _zeros_forest(extra, self.size, self.m)
+            self.forest = BatchedForest(
+                *(jnp.concatenate([a, b]) for a, b in zip(self.forest, pad))
+            )
+
+
+class AliasArena(_Arena):
+    """One stacked packed-alias arena: the PRNG fast path's payload.
+
+    Same lifecycle as the forest classes (free list, versions, raw
+    shadows); the payload is a :class:`~repro.pool.batched.BatchedAlias`
+    stack written by the fused split-and-pack build. ``rebuilds``/``skips``
+    count :meth:`ForestPool.update_weights` work (a bit-unchanged padded
+    weight row skips the re-pack)."""
+
+    def __init__(self, size: int, init_rows: int):
+        super().__init__(size, init_rows)
+        self.table: BatchedAlias | None = None  # allocated on first build
+        self.rebuilds = 0
+        self.skips = 0
+
+    def _grow_payload(self, extra: int) -> None:
+        if self.table is not None:
+            pad = _zeros_alias(extra, self.size)
+            self.table = BatchedAlias(
+                *(jnp.concatenate([a, b]) for a, b in zip(self.table, pad))
+            )
 
 
 def _zeros_forest(rows: int, n: int, m: int) -> BatchedForest:
@@ -111,14 +186,27 @@ def _zeros_forest(rows: int, n: int, m: int) -> BatchedForest:
     )
 
 
+def _zeros_alias(rows: int, n: int) -> BatchedAlias:
+    """Placeholder/cleared alias rows: ``q == 0`` with self-aliases — inert
+    even if read (every draw resolves to cell 0's alias 0)."""
+    return BatchedAlias(
+        q=jnp.zeros((rows, n), jnp.float32),
+        alias=jnp.zeros((rows, n), jnp.int32),
+    )
+
+
 class ForestPool:
-    """A batched radix-forest pool over power-of-two size-class arenas.
+    """A batched two-method sampling pool over power-of-two size-class
+    arenas: radix forests for stream-sensitive (QMC) tenants, packed alias
+    tables for bulk PRNG tenants, selected per slot at admission.
 
     Parameters: ``min_class`` floors the smallest padded size (tiny tenants
     share one class instead of one class per n); ``m`` pins one guide
-    resolution for every class (default: each class uses ``m = size``, the
-    repo-wide guide density); ``init_rows`` is the starting arena height,
-    doubled on demand.
+    resolution for every forest class (default: each class uses
+    ``m = size``, the repo-wide guide density); ``init_rows`` is the
+    starting arena height, doubled on demand. Forest and alias arenas are
+    disjoint per size (``classes`` / ``alias_classes``); a handle's
+    ``method`` routes every pool call to the right one.
     """
 
     def __init__(self, min_class: int = 8, m: int | None = None,
@@ -129,22 +217,35 @@ class ForestPool:
         self._m = m
         self.init_rows = max(int(init_rows), 1)
         self.classes: dict[int, _SizeClass] = {}
+        self.alias_classes: dict[int, AliasArena] = {}
 
     # ------------------------------------------------------------- plumbing
 
-    def _class_for(self, n: int) -> _SizeClass:
+    def _class_for(self, n: int, method: str = "forest") -> _Arena:
+        if method not in METHODS:
+            raise ValueError(f"unknown sampling method {method!r}; "
+                             f"expected one of {METHODS}")
         size = _pow2_at_least(n, self.min_class)
+        if method == "alias":
+            ar = self.alias_classes.get(size)
+            if ar is None:
+                ar = AliasArena(size, self.init_rows)
+                self.alias_classes[size] = ar
+            return ar
         sc = self.classes.get(size)
         if sc is None:
             sc = _SizeClass(size, self._m or size, self.init_rows)
             self.classes[size] = sc
         return sc
 
-    def _check(self, h: Handle) -> _SizeClass:
+    def _check(self, h: Handle) -> _Arena:
         # O(1): ``raw`` holds exactly the occupied rows (insert sets, evict
         # pops), and evict bumps the version BEFORE freeing, so a recycled
-        # row can never satisfy a stale handle's version.
-        sc = self.classes.get(h.size_class)
+        # row can never satisfy a stale handle's version. The method field
+        # picks the arena table, so a forest handle can never validate
+        # against an alias row of the same (size, row) coordinates.
+        table = self.alias_classes if h.method == "alias" else self.classes
+        sc = table.get(h.size_class)
         if (
             sc is None
             or h.row not in sc.raw
@@ -152,24 +253,6 @@ class ForestPool:
         ):
             raise ValueError(f"stale or evicted handle: {h}")
         return sc
-
-    def _grow(self, sc: _SizeClass) -> None:
-        extra = sc.rows
-        sc.free.extend(range(sc.rows + extra - 1, sc.rows - 1, -1))
-        pad = _zeros_forest(extra, sc.size, sc.m)
-        if sc.forest is not None:
-            sc.forest = BatchedForest(
-                *(jnp.concatenate([a, b]) for a, b in zip(sc.forest, pad))
-            )
-        sc.n_true = np.concatenate([sc.n_true, np.zeros(extra, np.int64)])
-        sc.versions = np.concatenate([sc.versions, np.zeros(extra, np.int64)])
-        sc.rows += extra
-        sc.grows += 1
-
-    def _take_row(self, sc: _SizeClass) -> int:
-        if not sc.free:
-            self._grow(sc)
-        return sc.free.pop()
 
     def _pad(self, w: np.ndarray, size: int) -> np.ndarray:
         return np.pad(w.astype(np.float32), (0, size - len(w)))
@@ -183,54 +266,89 @@ class ForestPool:
             *(a.at[idx].set(b) for a, b in zip(sc.forest, built))
         )
 
+    def _write_alias_rows(self, ar: AliasArena, rows: list[int],
+                          built: BatchedAlias) -> None:
+        if ar.table is None:
+            ar.table = _zeros_alias(ar.rows, ar.size)
+        idx = jnp.asarray(rows, jnp.int32)
+        ar.table = BatchedAlias(
+            *(a.at[idx].set(b) for a, b in zip(ar.table, built))
+        )
+
     # ------------------------------------------------------------ lifecycle
 
-    def insert(self, weights) -> Handle:
+    def insert(self, weights, method: str = "forest") -> Handle:
         """Admit one tenant; see :meth:`insert_many` for the fused path."""
-        return self.insert_many([weights])[0]
+        return self.insert_many([weights], method=method)[0]
 
-    def insert_many(self, weights_list) -> list[Handle]:
-        """Admit a group of tenants, fusing each size class's builds into
-        ONE batched launch (``build_forest_batched`` over the stacked padded
-        rows) — the build-B-at-once path the pool exists for. The group is
-        padded to a power-of-two batch so heterogeneous admission waves
-        reuse a logarithmic number of compiled build programs."""
+    def insert_many(self, weights_list, method="forest") -> list[Handle]:
+        """Admit a group of tenants, fusing each (method, size class)
+        group's builds into ONE batched launch (``build_forest_batched`` /
+        the split-and-pack alias kernel over the stacked padded rows) — the
+        build-B-at-once path the pool exists for. ``method`` is a single
+        method for the whole wave or a per-tenant sequence
+        (``"forest"``/``"alias"``). The group is padded to a power-of-two
+        batch so heterogeneous admission waves reuse a logarithmic number
+        of compiled build programs."""
         raws = [np.asarray(w, np.float64) for w in weights_list]
+        if isinstance(method, str):
+            methods = [method] * len(raws)
+        else:
+            methods = list(method)
+        if len(methods) != len(raws):
+            raise ValueError("method list must align with weights_list")
         norms = [normalize_weights(r) for r in raws]
         handles: list[Handle | None] = [None] * len(raws)
-        by_class: dict[int, list[int]] = {}
+        by_group: dict[tuple[str, int], list[int]] = {}
         for i, w in enumerate(norms):
-            sc = self._class_for(len(w))
-            by_class.setdefault(sc.size, []).append(i)
-        for size, idxs in by_class.items():
-            sc = self.classes[size]
-            rows = [self._take_row(sc) for _ in idxs]
+            ar = self._class_for(len(w), methods[i])
+            by_group.setdefault((methods[i], ar.size), []).append(i)
+        for (meth, size), idxs in by_group.items():
+            ar = self._class_for(size, meth)
+            rows = [ar.take_row() for _ in idxs]
             stack = np.stack([self._pad(norms[i], size) for i in idxs])
             bpad = _pow2_at_least(len(idxs), 1)
             if bpad != len(idxs):  # dummy rows keep the program count low
                 fill = np.full((bpad - len(idxs), size), 1.0, np.float32)
                 stack = np.concatenate([stack, fill])
-            built = build_forest_batched(jnp.asarray(stack), sc.m)
-            built = BatchedForest(*(a[: len(idxs)] for a in built))
-            self._write_rows(sc, rows, built)
-            sc.builds += len(idxs)
+            if meth == "alias":
+                q, a = ops.alias_build_batched(
+                    jnp.asarray(stack), use_pallas=ops.use_pallas_default()
+                )
+                self._write_alias_rows(
+                    ar, rows, BatchedAlias(q[: len(idxs)], a[: len(idxs)])
+                )
+                ar.builds += len(idxs)
+                for i, row in zip(idxs, rows):
+                    ar.n_true[row] = len(norms[i])
+                    ar.raw[row] = raws[i]
+                    handles[i] = Handle(
+                        size, row, len(norms[i]), int(ar.versions[row]), "alias"
+                    )
+                continue
+            built = build_forest_batched(jnp.asarray(stack), ar.m)
+            built = BatchedForest(*(x[: len(idxs)] for x in built))
+            self._write_rows(ar, rows, built)
+            ar.builds += len(idxs)
             # one sync per admission wave keeps the drain path sync-free
             flagged = np.asarray(built.fallback.any(axis=1))
             for (i, row), flag in zip(zip(idxs, rows), flagged):
-                sc.n_true[row] = len(norms[i])
-                sc.raw[row] = raws[i]
+                ar.n_true[row] = len(norms[i])
+                ar.raw[row] = raws[i]
                 if flag:
-                    sc.degenerate_rows.add(row)
-                handles[i] = Handle(size, row, len(norms[i]), int(sc.versions[row]))
+                    ar.degenerate_rows.add(row)
+                handles[i] = Handle(size, row, len(norms[i]),
+                                    int(ar.versions[row]))
         return handles  # type: ignore[return-value]
 
     def update_weights(self, handle: Handle, weights=None, *, delta=None) -> None:
         """In-place re-target of one tenant (full weights or a delta on the
-        raw weights). The Algorithm-1 re-work routes through
+        raw weights). Forest rows route the Algorithm-1 re-work through
         :func:`repro.kernels.ops.forest_delta_update`: bit-unchanged CDFs
         skip the rebuild; otherwise the returned separator distances feed a
-        single-row rebuild. The handle stays valid (versions track slot
-        reuse, not content)."""
+        single-row rebuild. Alias rows re-run the split-and-pack on the one
+        padded row, with the skip keyed on the padded float32 weight bits.
+        The handle stays valid (versions track slot reuse, not content)."""
         sc = self._check(handle)
         for name, arr in (("weights", weights), ("delta", delta)):
             if arr is not None and np.asarray(arr).shape != (handle.n,):
@@ -239,8 +357,22 @@ class ForestPool:
                     f"{name} of shape {np.asarray(arr).shape} (scalars and "
                     f"padded-size arrays would silently broadcast)"
                 )
-        raw, w = updated_weights(sc.raw[handle.row], weights, delta=delta)
+        old_raw = sc.raw[handle.row]
+        raw, w = updated_weights(old_raw, weights, delta=delta)
         sc.raw[handle.row] = raw
+        if handle.method == "alias":
+            new_row = self._pad(w, sc.size)
+            old_row = self._pad(normalize_weights(old_raw), sc.size)
+            # skip keyed on the exact bits the table is a function of
+            if np.array_equal(new_row.view(np.uint32), old_row.view(np.uint32)):
+                sc.skips += 1
+                return
+            q, a = ops.alias_build_batched(
+                jnp.asarray(new_row[None]), use_pallas=ops.use_pallas_default()
+            )
+            self._write_alias_rows(sc, [handle.row], BatchedAlias(q, a))
+            sc.rebuilds += 1
+            return
         new_cdf = build_cdf(jnp.asarray(self._pad(w, sc.size)))
         old_cdf = sc.forest.cdf[handle.row]
         # Skip keyed on raw CDF bits (the dist-layer policy): the clamped
@@ -267,17 +399,25 @@ class ForestPool:
         sc.delta_rebuilds += 1
 
     def evict(self, handle: Handle) -> None:
-        """Release the tenant's row back to the class free list. The version
-        bump invalidates every outstanding handle to the row. The row's
-        fallback bits are cleared so a dead degenerate (tied-weight) tenant
-        stops forcing the side-table pre-resolution path on the whole
-        class's future drains (``ops.forest_sample_batched`` keys that path
-        off ``fallback.any()`` over the stack)."""
+        """Release the tenant's row back to its arena's free list. The
+        version bump invalidates every outstanding handle to the row, and
+        the freed row's arena state is cleared: forest rows drop their
+        fallback bits (a dead degenerate tenant must not force the
+        side-table pre-resolution path on the whole class's future drains),
+        alias rows zero their packed table (a cleared row is inert even if
+        a bug ever routed a lane into it)."""
         sc = self._check(handle)
         sc.versions[handle.row] += 1
         sc.n_true[handle.row] = 0
         sc.raw.pop(handle.row, None)
         sc.free.append(handle.row)
+        if handle.method == "alias":
+            if sc.table is not None:
+                sc.table = BatchedAlias(
+                    q=sc.table.q.at[handle.row].set(0.0),
+                    alias=sc.table.alias.at[handle.row].set(0),
+                )
+            return
         if handle.row in sc.degenerate_rows:
             sc.degenerate_rows.discard(handle.row)
             sc.forest = sc.forest._replace(
@@ -286,20 +426,21 @@ class ForestPool:
 
     # ------------------------------------------------------------- sampling
 
-    def _drain_plan(self, handles) -> dict[int, list[int]]:
-        """Validate handles and group draw indices by touched size class."""
+    def _drain_plan(self, handles) -> dict[tuple[str, int], list[int]]:
+        """Validate handles and group draw indices by (method, size class)
+        — each group is one batched kernel launch."""
         for h in set(handles):  # validate each distinct handle once
             self._check(h)
-        by_class: dict[int, list[int]] = {}
+        by_group: dict[tuple[str, int], list[int]] = {}
         for q, h in enumerate(handles):
-            by_class.setdefault(h.size_class, []).append(q)
-        return by_class
+            by_group.setdefault((h.method, h.size_class), []).append(q)
+        return by_group
 
     def _class_lanes(self, handles, qs) -> tuple[np.ndarray, int]:
-        """Per-class lane rows, sentinel-padded (-1) to a pow2 bucket: the
+        """Per-group lane rows, sentinel-padded (-1) to a pow2 bucket: the
         padding must never route into row 0 — after an evict that row holds
-        a freed tenant's stale (fallback-cleared) arrays, whose tied chains
-        can run deeper than the kernel's fixed trip count."""
+        a freed tenant's stale arrays (forest: fallback-cleared tied chains
+        deeper than the kernel's fixed trip count; alias: zeroed table)."""
         qpad = _pow2_at_least(len(qs), 64)  # bucket the drain size too
         didp = np.full(qpad, -1, np.int32)
         didp[: len(qs)] = [handles[q].row for q in qs]
@@ -312,27 +453,36 @@ class ForestPool:
     def sample(self, handles, xi, use_pallas: bool = True,
                coalesce: bool = True) -> np.ndarray:
         """Bulk mixed-batch drain from host uniforms: draw q resolves
-        ``xi[q]`` in ``handles[q]``'s distribution. One
-        ``forest_sample_batched`` launch per touched size class (the whole
-        point: a thousand tenants over 3 classes is 3 launches, not 1000).
-        Results are clipped to each tenant's true range (zero-width padded
-        intervals are measure-zero boundary hits). Returns (Q,) int32
-        row-local interval indices. Serving should prefer
-        :meth:`sample_streams`; this is the oracle/compat path."""
+        ``xi[q]`` in ``handles[q]``'s distribution. One batched kernel
+        launch per touched (method, size class) group — forest groups
+        descend ``forest_sample_batched``, alias groups take the O(1)
+        ``alias_sample_batched`` path (the whole point: a thousand tenants
+        over 3 classes is 3 launches, not 1000). Results are clipped to
+        each tenant's true range (zero-width padded intervals / q==0
+        padded cells are unreachable). Returns (Q,) int32 row-local
+        indices. QMC serving should prefer :meth:`sample_streams`; this is
+        the oracle/compat path and the natural PRNG entry point."""
         xi = np.asarray(xi, np.float32)
         if len(handles) != len(xi):
             raise ValueError("handles and xi must align elementwise")
         out = np.empty(len(xi), np.int32)
-        for size, qs in self._drain_plan(handles).items():
-            sc = self.classes[size]
+        for (meth, size), qs in self._drain_plan(handles).items():
             didp, qpad = self._class_lanes(handles, qs)
             up = np.pad(xi[qs], (0, qpad - len(qs)))
-            idx = ops.forest_sample_batched(
-                sc.forest, jnp.asarray(didp), jnp.asarray(up),
-                use_pallas=use_pallas, coalesce=coalesce,
-                # host-side flag bookkeeping spares the drain a device sync
-                degenerate=bool(sc.degenerate_rows),
-            )
+            if meth == "alias":
+                ar = self.alias_classes[size]
+                idx = ops.alias_sample_batched(
+                    ar.table, jnp.asarray(didp), jnp.asarray(up),
+                    use_pallas=use_pallas, coalesce=coalesce,
+                )
+            else:
+                sc = self.classes[size]
+                idx = ops.forest_sample_batched(
+                    sc.forest, jnp.asarray(didp), jnp.asarray(up),
+                    use_pallas=use_pallas, coalesce=coalesce,
+                    # host-side flag bookkeeping spares the drain a device sync
+                    degenerate=bool(sc.degenerate_rows),
+                )
             self._clip_out(out, handles, qs, idx)
         return out
 
@@ -344,23 +494,35 @@ class ForestPool:
         stream side on device. ``streams`` follows the ``DeviceQmcStreams``
         protocol: ``draw(slots)`` ranks duplicate slots, advances the
         per-slot counters (functionally, device-side), and hands back the
-        per-lane rank-adjusted counters + offset bits; each touched size
-        class then runs ONE ``forest_sample_batched_streams`` launch that
+        per-lane rank-adjusted counters + offset bits; each touched forest
+        group then runs ONE ``forest_sample_batched_streams`` launch that
         recomputes the points in-kernel and walks coalesced per-tree tiles.
-        Zero host-side counter mutation anywhere on this path. With
-        ``return_xi`` also returns the (Q,) float32 points that were drawn
-        (bit-equal to the host ``QmcStreams`` oracle — differential tests).
-        """
+        Alias groups (legal, but they forfeit the stratification the
+        streams exist for — serving's ``auto`` method keeps QMC tenants on
+        the forest path) consume the pre-pass points through ONE
+        ``alias_sample_batched`` launch. Zero host-side counter mutation
+        anywhere on this path. With ``return_xi`` also returns the (Q,)
+        float32 points that were drawn (bit-equal to the host
+        ``QmcStreams`` oracle — differential tests)."""
         slots = np.asarray(slots)
         if len(handles) != len(slots):
             raise ValueError("handles and slots must align elementwise")
         ctr, off, xi = streams.draw(slots)
         out = np.empty(len(slots), np.int32)
-        for size, qs in self._drain_plan(handles).items():
-            sc = self.classes[size]
+        for (meth, size), qs in self._drain_plan(handles).items():
             didp, qpad = self._class_lanes(handles, qs)
             sel = jnp.asarray(qs, jnp.int32)
             pad = qpad - len(qs)
+            if meth == "alias":
+                ar = self.alias_classes[size]
+                up = jnp.pad(jnp.asarray(xi)[sel], (0, pad))
+                idx = ops.alias_sample_batched(
+                    ar.table, jnp.asarray(didp), up,
+                    use_pallas=use_pallas, coalesce=coalesce,
+                )
+                self._clip_out(out, handles, qs, idx)
+                continue
+            sc = self.classes[size]
             ctrp = jnp.pad(ctr[sel], (0, pad))
             offp = jnp.pad(off[sel], (0, pad))
             idx, _ = ops.forest_sample_batched_streams(
@@ -378,8 +540,22 @@ class ForestPool:
     def forest_row(self, handle: Handle) -> RadixForest:
         """The tenant's padded forest as a single-distribution view
         (differential tests; serving should drain through :meth:`sample`)."""
+        if handle.method != "forest":
+            raise ValueError(
+                f"handle method is {handle.method!r}; use alias_row"
+            )
         sc = self._check(handle)
         return sc.forest.row(handle.row)
+
+    def alias_row(self, handle: Handle) -> AliasTable:
+        """The tenant's padded packed alias table as a single-distribution
+        view (differential tests; serving drains through :meth:`sample`)."""
+        if handle.method != "alias":
+            raise ValueError(
+                f"handle method is {handle.method!r}; use forest_row"
+            )
+        ar = self._check(handle)
+        return ar.table.row(handle.row)
 
     def weights(self, handle: Handle) -> np.ndarray:
         """Normalized float32 weights currently served for the tenant."""
@@ -387,7 +563,9 @@ class ForestPool:
         return normalize_weights(sc.raw[handle.row])
 
     def stats(self) -> dict:
-        """Per-class occupancy/build counters + pool-level program count."""
+        """Per-class occupancy/build counters + pool-level tenant count
+        (both methods; ``classes`` is the forest side, ``alias_classes``
+        the packed-alias side)."""
         per = {
             size: dict(
                 m=sc.m, rows=sc.rows, occupied=sc.occupied,
@@ -397,9 +575,19 @@ class ForestPool:
             )
             for size, sc in sorted(self.classes.items())
         }
+        aper = {
+            size: dict(
+                rows=ar.rows, occupied=ar.occupied, free=len(ar.free),
+                builds=ar.builds, rebuilds=ar.rebuilds, skips=ar.skips,
+                grows=ar.grows,
+            )
+            for size, ar in sorted(self.alias_classes.items())
+        }
         return dict(
             classes=per,
-            tenants=sum(sc.occupied for sc in self.classes.values()),
+            alias_classes=aper,
+            tenants=sum(sc.occupied for sc in self.classes.values())
+            + sum(ar.occupied for ar in self.alias_classes.values()),
         )
 
 

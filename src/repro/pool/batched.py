@@ -27,8 +27,36 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.alias import AliasTable
 from repro.core.cdf import build_cdf
 from repro.core.forest import RadixForest, forest_from_cdf
+
+
+class BatchedAlias(NamedTuple):
+    """B stacked packed alias tables over a shared size class — the
+    O(1)-per-draw twin of :class:`BatchedForest` for PRNG tenants.
+
+    Row ``b`` is exactly the :class:`repro.core.alias.AliasTable` of
+    distribution ``b`` (``alias`` entries are row-local cell indices).
+    Half the footprint of a forest row (8 bytes/cell) and two gathers per
+    draw; the price is a non-monotone map, so QMC tenants stay on the
+    forest stack."""
+
+    q: jax.Array      # (B, n) f32 split point within each cell
+    alias: jax.Array  # (B, n) i32 second interval of each cell
+
+    @property
+    def batch(self) -> int:
+        return self.q.shape[0]
+
+    @property
+    def n(self) -> int:
+        return self.q.shape[1]
+
+    def row(self, b: int) -> AliasTable:
+        """Single-distribution view (differential tests; serving drains
+        through the batched kernel)."""
+        return AliasTable(self.q[b], self.alias[b])
 
 
 class BatchedForest(NamedTuple):
@@ -105,3 +133,30 @@ def sample_forest_batched(
     from repro.kernels import ops
 
     return ops.forest_sample_batched(forest, dist_id, xi, use_pallas=use_pallas)
+
+
+def build_alias_batched(weights: jax.Array, use_pallas: bool = True) -> BatchedAlias:
+    """The fused batched alias build: (B, n) weights -> B packed tables in
+    one program (``kernels.alias_build``; the ref and kernel paths share
+    the row core, so both are bit-identical). Rows with exact dyadic
+    weights match ``core.alias.build_alias_parallel`` bit for bit."""
+    from repro.kernels import ops
+
+    return BatchedAlias(*ops.alias_build_batched(
+        jnp.asarray(weights, jnp.float32), use_pallas=use_pallas
+    ))
+
+
+def sample_alias_batched(
+    table: BatchedAlias,
+    dist_id: jax.Array,
+    xi: jax.Array,
+    use_pallas: bool = True,
+) -> jax.Array:
+    """Bulk mixed-batch alias drain: draw ``q`` resolves uniform ``xi[q]``
+    in distribution ``dist_id[q]``'s packed table — O(1) per lane, one
+    launch for the whole batch. Thin re-export of
+    :func:`repro.kernels.ops.alias_sample_batched`."""
+    from repro.kernels import ops
+
+    return ops.alias_sample_batched(table, dist_id, xi, use_pallas=use_pallas)

@@ -39,6 +39,10 @@ class Request:
     max_new: int = 32
     eos: int | None = None
     prior: np.ndarray | None = None  # per-request categorical (pool path)
+    # sampling method for the prior's pool slot: "forest" (monotone,
+    # QMC-safe), "alias" (packed O(1) tables, bulk PRNG traffic), or
+    # "auto" — let the prior sampler pick by its stream kind
+    method: str = "auto"
     out: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
 
@@ -84,7 +88,10 @@ class ServeEngine:
                 n_slots=self.n_slots, use_pallas=False
             )
         slots = np.asarray([s for s, _ in admitted])
-        hs = self.prior_sampler.add_many([r.prior for _, r in admitted])
+        hs = self.prior_sampler.add_many(
+            [r.prior for _, r in admitted],
+            method=[r.method for _, r in admitted],
+        )
         for (s, _), h in zip(admitted, hs):
             self.prior_handles[s] = h
         toks = self.prior_sampler.sample(hs, slots)

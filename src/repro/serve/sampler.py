@@ -247,28 +247,61 @@ class PooledForestSampler:
     suite pins it). ``update``/``remove`` re-target and retire tenants in
     place; slot QMC streams keep their counters across tenant churn, so
     stratification survives distribution swaps exactly as in
-    :class:`ForestSampler`."""
+    :class:`ForestSampler`.
+
+    **Stream kind and per-tenant method.** ``streams="qmc"`` (default)
+    drives the per-slot low-discrepancy streams above; ``streams="prng"``
+    replaces them with one seeded PRNG (the MC baseline — no
+    stratification to protect). Tenants declare stream sensitivity at
+    admission: ``method="forest"`` (monotone map, QMC-safe),
+    ``method="alias"`` (packed O(1) tables — the bulk fast path), or
+    ``method="auto"`` (default), which picks **alias under PRNG streams
+    and forest under QMC streams** — exactly the paper's tradeoff: spend
+    the descent only where a stratified stream would be destroyed by the
+    non-monotone alias map."""
 
     def __init__(self, n_slots: int = 64, seed: int = 0, min_class: int = 8,
                  m: int | None = None, use_pallas: bool = True,
-                 device_streams: bool = True):
+                 device_streams: bool = True, streams: str = "qmc"):
         from repro.pool import ForestPool  # lazy: serve stays importable
 
+        if streams not in ("qmc", "prng"):
+            raise ValueError(f"streams must be 'qmc' or 'prng', got {streams!r}")
         self.pool = ForestPool(min_class=min_class, m=m)
-        self.device_streams = device_streams
-        self.streams = (
-            DeviceQmcStreams(n_slots, seed) if device_streams
-            else QmcStreams(n_slots, seed)
-        )
+        self.stream_kind = streams
+        self.device_streams = device_streams and streams == "qmc"
+        if streams == "qmc":
+            self.streams = (
+                DeviceQmcStreams(n_slots, seed) if device_streams
+                else QmcStreams(n_slots, seed)
+            )
+            self.rng = None
+        else:
+            self.streams = None
+            self.rng = np.random.default_rng(seed)
         self.use_pallas = use_pallas
 
-    def add(self, weights):
-        """Admit one tenant; returns its pool handle."""
-        return self.pool.insert(weights)
+    def _resolve(self, method: str) -> str:
+        """``auto`` -> alias for PRNG streams (nothing to protect, take the
+        O(1) path), forest for QMC streams (the monotone map keeps the
+        stratification the streams exist for)."""
+        if method == "auto":
+            return "alias" if self.stream_kind == "prng" else "forest"
+        return method
 
-    def add_many(self, weights_list):
-        """Admit an admission wave through the fused batched builder."""
-        return self.pool.insert_many(weights_list)
+    def add(self, weights, method: str = "auto"):
+        """Admit one tenant; returns its pool handle. ``method`` is
+        ``"forest"``/``"alias"``/``"auto"`` (see the class docstring)."""
+        return self.pool.insert(weights, method=self._resolve(method))
+
+    def add_many(self, weights_list, method="auto"):
+        """Admit an admission wave through the fused batched builders.
+        ``method`` is one choice for the wave or a per-tenant sequence."""
+        if isinstance(method, str):
+            methods = [self._resolve(method)] * len(weights_list)
+        else:
+            methods = [self._resolve(m) for m in method]
+        return self.pool.insert_many(weights_list, method=methods)
 
     def update(self, handle, weights=None, *, delta=None) -> None:
         self.pool.update_weights(handle, weights, delta=delta)
@@ -278,8 +311,14 @@ class PooledForestSampler:
 
     def sample(self, handles, slots: np.ndarray) -> np.ndarray:
         """One draw per slot from that slot's tenant distribution — the
-        batched drain. ``handles[i]`` pairs with ``slots[i]``'s QMC
-        stream."""
+        batched drain. ``handles[i]`` pairs with ``slots[i]``'s stream.
+        Under QMC streams this is one pool call regardless of tenant
+        methods (forest groups walk the stream-aware descent, alias groups
+        consume the same pre-pass points); under PRNG streams the uniforms
+        are one seeded vector draw."""
+        if self.stream_kind == "prng":
+            xi = self.rng.random(len(slots)).astype(np.float32)
+            return self.pool.sample(handles, xi, use_pallas=self.use_pallas)
         if self.device_streams:
             return self.pool.sample_streams(
                 handles, np.asarray(slots), self.streams,
@@ -308,11 +347,14 @@ class TokenSampler:
         """logits (B, V) -> token ids (B,)."""
         if self.mode == "alias":
             p = np.asarray(jax.nn.softmax(logits / self.temperature, axis=-1))
+            # every mode consumes the SAME per-slot draw protocol: mode
+            # comparisons (inverse_rng vs alias) then contrast mappings,
+            # not randomness, and the serving-diversity bench is honest
+            xi = self.uniforms(slots)
             out = np.empty(len(slots), np.int64)
             for i in range(len(slots)):  # serial build per row — the point
                 t = build_alias(p[i])
-                xi = self.rng.random()
-                out[i] = int(np.asarray(sample_alias(t, jnp.float32(xi))))
+                out[i] = int(np.asarray(sample_alias(t, jnp.float32(xi[i]))))
             return out.astype(np.int32)
         xi = self.uniforms(slots)
         cdf = ops.fused_cdf(

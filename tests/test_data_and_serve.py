@@ -202,6 +202,57 @@ def test_token_sampler_modes_agree_on_peaked_logits(tiny_lm):
         np.testing.assert_array_equal(got, [7, 100, 1])
 
 
+def test_token_sampler_alias_routes_through_slot_uniforms():
+    """Regression: alias mode drew a FRESH ``self.rng.random()`` per row
+    instead of routing through ``uniforms(slots)``, so inverse_rng-vs-alias
+    comparisons never shared a draw sequence (the serving-diversity bench
+    compared randomness, not mappings). Pin: override ``uniforms`` with a
+    fixed vector and assert alias mode consumes exactly those values —
+    matching a per-row build_alias + sample_alias oracle at the same xi."""
+    import jax
+    from repro.core.alias import build_alias, sample_alias
+
+    rng = np.random.default_rng(5)
+    logits = rng.normal(0, 2, (4, 32)).astype(np.float32)
+    fixed = np.array([0.05, 0.93, 0.42, 0.61], np.float32)
+    ts = TokenSampler(mode="alias", n_slots=4, seed=0, use_pallas=False)
+    ts.uniforms = lambda slots: fixed[: len(slots)]
+    got = ts.sample(jnp.asarray(logits), np.arange(4))
+    p = np.asarray(jax.nn.softmax(jnp.asarray(logits), axis=-1))
+    want = [
+        int(np.asarray(sample_alias(build_alias(p[i]), jnp.float32(fixed[i]))))
+        for i in range(4)
+    ]
+    np.testing.assert_array_equal(got, want)
+
+
+def test_token_sampler_seeded_cross_mode_same_uniforms():
+    """With the same seed, inverse_rng and alias consume the SAME uniform
+    sequence (both through ``uniforms(slots)``), so the per-row alias
+    oracle evaluated at inverse_rng's uniforms predicts alias mode's
+    tokens exactly — a mode comparison now contrasts mappings only."""
+    import jax
+    from repro.core.alias import build_alias, sample_alias
+
+    rng = np.random.default_rng(11)
+    logits = rng.normal(0, 1.5, (6, 48)).astype(np.float32)
+    lj = jnp.asarray(logits)
+    seed = 123
+    xi = np.random.default_rng(seed).random(6).astype(np.float32)  # the shared stream
+    s_alias = TokenSampler(mode="alias", n_slots=6, seed=seed, use_pallas=False)
+    got = s_alias.sample(lj, np.arange(6))
+    p = np.asarray(jax.nn.softmax(lj, axis=-1))
+    want = [
+        int(np.asarray(sample_alias(build_alias(p[i]), jnp.float32(xi[i]))))
+        for i in range(6)
+    ]
+    np.testing.assert_array_equal(got, want)
+    # and inverse_rng with the same seed sees the same xi (shared protocol)
+    s_inv = TokenSampler(mode="inverse_rng", n_slots=6, seed=seed,
+                         use_pallas=False)
+    np.testing.assert_array_equal(s_inv.uniforms(np.arange(6)), xi)
+
+
 def test_int8_quantization_roundtrip():
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.normal(0, 0.01, (256,)), jnp.float32)

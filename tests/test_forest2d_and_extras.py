@@ -327,3 +327,51 @@ def test_parallel_alias_sampling_marginals():
     expect = w * len(xi)
     chi2 = np.sum((counts - expect) ** 2 / np.maximum(expect, 1e-9))
     assert chi2 < 220, chi2  # 63 dof
+
+
+def test_parallel_alias_dyadic_boundary_regression():
+    """Exact dyadic weights make a heavy's supply end coincide with a light's
+    demand boundary; the pre-fix build charged debt to a zero-surplus heavy
+    (``npi == 1`` exactly) and broke the telescoping-mass invariant by a full
+    0.5. The fixed build gates debt on ``surplus > 0`` and routes it past
+    zero-surplus runs — mass must be EXACT here (all values dyadic)."""
+    from repro.core.alias import build_alias_parallel
+
+    for w in (
+        np.array([0.25, 0.25, 0.5, 1.0]),          # npi = (.5, .5, 1, 2)
+        np.array([1.0, 0.5, 0.25, 0.25]),          # heavy-first ordering
+        np.array([1, 1, 2, 4, 8], np.float64),     # pow2 ladder, sum 16
+        np.array([0.5, 1.0, 0.5, 1.0, 1.0]),       # zero-surplus run
+        np.array([2, 1, 1, 2, 1, 1], np.float64),  # npi hits 1 twice
+    ):
+        t = build_alias_parallel(w)
+        mass = _alias_mass(np.asarray(t.q, np.float64), np.asarray(t.alias))
+        npi = w / w.sum() * len(w)
+        # f32 cast of dyadic values in [0,1] is exact => zero tolerance
+        assert np.array_equal(mass, npi), (w, mass, npi)
+
+
+@settings
+@hypothesis.given(
+    ints=st.lists(st.integers(min_value=1, max_value=64),
+                  min_size=2, max_size=12),
+)
+def test_parallel_alias_dyadic_family_exact(ints):
+    """The dyadic/exact-boundary family: integer weights completed to a
+    power-of-two total, so every ``npi = w*n/total`` is exactly
+    representable and boundary coincidences (including ``npi == 1``
+    zero-surplus heavies) occur constantly. The telescoping-mass invariant
+    must hold to float64 exactness (f32 table cast is exact for dyadics
+    with <= 24 mantissa bits, which these are)."""
+    from repro.core.alias import build_alias_parallel
+
+    s = sum(ints)
+    total = 1
+    while total < s + 1:
+        total <<= 1
+    w = np.asarray(ints + [total - s], np.float64)  # sum == total (pow2)
+    t = build_alias_parallel(w)
+    q, alias = np.asarray(t.q, np.float64), np.asarray(t.alias)
+    assert np.all((q >= 0.0) & (q <= 1.0))
+    mass = _alias_mass(q, alias)
+    np.testing.assert_allclose(mass, w / w.sum() * len(w), rtol=0, atol=1e-9)

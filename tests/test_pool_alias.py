@@ -1,0 +1,461 @@
+"""Conformance + regression suite for the per-tenant packed alias fast path.
+
+The contracts under test (module docstrings of ``repro.kernels.alias_build``
+/ ``alias_sample`` / ``repro.pool.arena``):
+
+* the batched split-and-pack build (Pallas kernel AND jnp ref) is
+  bit-identical between backends (shared row core), produces valid tables
+  (telescoping mass) across weight families, and matches
+  ``build_alias_parallel`` bit for bit on exact dyadic weights;
+* ``alias_sample_batched`` agrees **elementwise** with the float32 numpy
+  oracle across mixed size classes, degenerate tied rows, sentinel lanes,
+  and the xi -> 1 edge;
+* ``ForestPool`` treats method as a per-slot attribute: alias tenants share
+  the forest pool's free-list/version machinery (stale handles raise, evict
+  clears the packed row), mixed-method drains follow each tenant's own
+  distribution (chi-square GOF), and the forest path is byte-identical to a
+  pool that never heard of alias tables (method selection is additive);
+* the serve layer threads ``method`` end to end: ``auto`` resolves by
+  stream kind, and ``ServeEngine`` admission honors per-request methods.
+
+Plus the three alias-path regressions fixed in this PR (last-cell clamp,
+TokenSampler uniforms routing — pinned in test_data_and_serve — and the
+dyadic boundary fix — family-tested in test_forest2d_and_extras).
+"""
+import hypothesis
+import hypothesis.strategies as st
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.alias import (
+    ALIAS_FRAC_MAX,
+    build_alias,
+    build_alias_parallel,
+    np_sample_alias,
+    np_sample_alias_f32,
+    sample_alias,
+)
+from repro.core.cdf import normalize_weights
+from repro.kernels import ops
+from repro.pool import BatchedAlias, ForestPool, Handle, build_alias_batched
+
+settings = hypothesis.settings(max_examples=15, deadline=None)
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _release_compiled_programs():
+    """Drop this module's compiled programs on the way out. The suite
+    compiles hundreds of XLA programs in one process; without a release
+    point the accumulated compiler state can push a later module's compile
+    over the edge (observed as a deterministic backend_compile segfault in
+    test_stream_drain when this module precedes it)."""
+    yield
+    import jax
+
+    jax.clear_caches()
+
+_FAMILIES = ("uniform", "powerlaw", "ties", "zeros", "spike")
+
+
+def _family_weights(kind: str, n: int, rng) -> np.ndarray:
+    if kind == "uniform":
+        return rng.random(n).astype(np.float32) + np.float32(1e-3)
+    if kind == "powerlaw":
+        return (rng.random(n).astype(np.float32) ** 8) + np.float32(1e-9)
+    if kind == "ties":
+        base = rng.random(max(n // 4, 1)).astype(np.float32) + np.float32(1e-3)
+        return base[rng.integers(0, len(base), n)]
+    if kind == "zeros":
+        w = rng.random(n).astype(np.float32)
+        w[rng.random(n) < 0.5] = 0.0
+        w[rng.integers(0, n)] = 1.0
+        return w
+    w = np.full(n, 1e-7, np.float32)
+    w[rng.integers(0, n)] = 1.0
+    return w
+
+
+def _mass(q, alias) -> np.ndarray:
+    m = np.asarray(q, np.float64).copy()
+    np.add.at(m, np.asarray(alias), 1.0 - np.asarray(q, np.float64))
+    return m
+
+
+# ------------------------------------------------- last-cell clamp regression
+
+
+def test_sample_alias_last_cell_clamp_regression():
+    """Regression: a float64 uniform just below 1 casts to float32 1.0, so
+    ``scaled == n`` lands in the clipped last cell with ``frac == 1.0`` —
+    pre-fix the ``frac < q`` comparison failed unconditionally and the draw
+    took ``alias[n-1]`` even when the table says q == 1 (all mass in the
+    cell itself). The trap table: a float64 q just below 1 casts to f32 1.0
+    while its alias stays non-identity."""
+    assert np.float32(1 - 2**-53) == np.float32(1.0)  # the upcast trap
+    w = np.array([1 + 1e-12, 1 - 1e-12])
+    t = build_alias(w)
+    assert float(t.q[1]) == 1.0 and int(t.alias[1]) == 0  # trap armed
+    # the limit draw xi -> 1^- must resolve to the last cell itself
+    assert int(np.asarray(sample_alias(t, jnp.float32(1.0)))) == 1
+    q64 = np.asarray(t.q, np.float64)
+    a64 = np.asarray(t.alias)
+    assert int(np_sample_alias(q64, a64, np.array([1.0]))[0]) == 1
+    assert int(np_sample_alias_f32(q64, a64, np.array([1.0]))[0]) == 1
+
+
+@pytest.mark.parametrize("n", [2, 3, 8, 100, 1024, 4096, 1 << 16])
+def test_sample_alias_near_one_sweep(n):
+    """xi = largest float32 < 1 across n sweeps: in range, matching the
+    float32 numpy oracle, and landing in the last cell's own/alias pair."""
+    rng = np.random.default_rng(n)
+    w = rng.random(n) + 1e-3
+    t = build_alias_parallel(w)
+    xi = np.float32(ALIAS_FRAC_MAX)  # 1 - 2^-24
+    got = int(np.asarray(sample_alias(t, jnp.asarray(xi))))
+    q = np.asarray(t.q, np.float64)
+    a = np.asarray(t.alias)
+    want = int(np_sample_alias_f32(q, a, np.array([xi]))[0])
+    assert got == want
+    assert 0 <= got < n
+    assert got in (n - 1, int(a[n - 1]))
+
+
+# ---------------------------------------------------------- batched build
+
+
+@settings
+@hypothesis.given(
+    kind=st.sampled_from(_FAMILIES),
+    # sizes drawn from a fixed palette so the example sweep reuses a handful
+    # of compiled program shapes instead of minting one per (B, n) draw
+    n=st.sampled_from((2, 3, 8, 33, 96, 160)),
+    B=st.sampled_from((1, 4)),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_alias_build_backends_bit_identical_and_valid(kind, n, B, seed):
+    """Pallas kernel == jnp ref bit for bit (shared row core), and every
+    row satisfies the telescoping-mass invariant at float32 tolerance."""
+    rng = np.random.default_rng(seed)
+    W = np.stack([normalize_weights(_family_weights(kind, n, rng))
+                  for _ in range(B)])
+    Wj = jnp.asarray(W, jnp.float32)
+    q1, a1 = ops.alias_build_batched(Wj, use_pallas=False)
+    q2, a2 = ops.alias_build_batched(Wj, use_pallas=True)
+    assert np.array_equal(np.asarray(q1), np.asarray(q2))
+    assert np.array_equal(np.asarray(a1), np.asarray(a2))
+    q, a = np.asarray(q1), np.asarray(a1)
+    assert np.all((q >= 0.0) & (q <= 1.0))
+    assert np.all((a >= 0) & (a < n))
+    for b in range(B):
+        w32 = W[b].astype(np.float32)
+        npi = w32.astype(np.float64) / w32.sum(dtype=np.float64) * n
+        np.testing.assert_allclose(_mass(q[b], a[b]), npi,
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_alias_build_rows_match_parallel_build_on_dyadics():
+    """On exact dyadic weights the batched build must reproduce the fixed
+    host ``build_alias_parallel`` bit for bit, row by row (same boundary
+    policy: zero-surplus heavies owe nothing, debts skip them). Every row
+    has a power-of-two total so ``npi = w/sum*n`` is exactly representable
+    — off the dyadic grid the f64 host build and the f32 kernel may split
+    boundary debt differently (both tables valid, same mass)."""
+    rows = [
+        np.array([0.25, 0.25, 0.5, 1.0]),
+        np.array([1.0, 0.5, 0.25, 0.25]),
+        np.array([0.5, 1.0, 0.5, 2.0]),  # zero-surplus heavy at npi == 1
+        np.array([2.0, 1.0, 0.5, 0.5]),
+    ]
+    W = jnp.asarray(np.stack(rows), jnp.float32)
+    for up in (False, True):
+        q, a = ops.alias_build_batched(W, use_pallas=up)
+        for b, w in enumerate(rows):
+            t = build_alias_parallel(w)
+            assert np.array_equal(np.asarray(q[b]), np.asarray(t.q)), (up, b)
+            assert np.array_equal(np.asarray(a[b]), np.asarray(t.alias)), (up, b)
+
+
+def test_alias_build_zero_padded_cells_unreachable():
+    """Padded (zero-weight) cells become q == 0 lights that are never an
+    alias target — no uniform can resolve to one."""
+    w = np.pad(np.array([0.3, 0.5, 0.2], np.float32), (0, 5))
+    bt = build_alias_batched(jnp.asarray(w[None]))
+    q, a = np.asarray(bt.q[0]), np.asarray(bt.alias[0])
+    assert np.all(q[3:] == 0.0)
+    assert not np.any(np.isin(a, np.arange(3, 8)) & (q < 1.0))
+    xi = np.linspace(0, 1, 4097, dtype=np.float32)[:-1]
+    idx = np_sample_alias_f32(q, a, xi)
+    assert np.all(idx < 3)
+
+
+# --------------------------------------------------------- batched sampling
+
+
+def test_alias_sample_batched_matches_oracle_mixed_rows():
+    """Elementwise differential vs the float32 numpy oracle across mixed
+    rows (incl. degenerate all-tied and spike rows), sentinel lanes, both
+    backends, coalesced and scattered lane orders, and edge uniforms."""
+    rng = np.random.default_rng(7)
+    n = 32
+    rows = [
+        _family_weights("uniform", n, rng),
+        np.ones(n, np.float32),                      # exactly uniform: identity
+        _family_weights("ties", n, rng),
+        _family_weights("spike", n, rng),
+        _family_weights("zeros", n, rng),
+    ]
+    W = np.stack([normalize_weights(r) for r in rows])
+    bt = build_alias_batched(jnp.asarray(W, jnp.float32))
+    Q = 2000
+    did = rng.integers(-1, len(rows), Q).astype(np.int32)
+    xi = rng.random(Q).astype(np.float32)
+    xi[:4] = [0.0, np.float32(ALIAS_FRAC_MAX), 1.0, 0.5]
+    qn, an = np.asarray(bt.q), np.asarray(bt.alias)
+    want = np.array(
+        [np_sample_alias_f32(qn[d], an[d], np.array([x]))[0] if d >= 0 else 0
+         for d, x in zip(did, xi)],
+        np.int32,
+    )
+    for up in (False, True):
+        for co in (False, True):
+            got = np.asarray(ops.alias_sample_batched(
+                bt, jnp.asarray(did), jnp.asarray(xi),
+                use_pallas=up, coalesce=co,
+            ))
+            assert np.array_equal(got, want), (up, co)
+
+
+# ------------------------------------------------------------- pool arena
+
+
+def test_pool_alias_handles_and_rows():
+    """Alias tenants pack into their own arenas; every occupied row is
+    bit-identical to a standalone batched build of the padded weights."""
+    rng = np.random.default_rng(3)
+    pool = ForestPool()
+    tenants = [rng.random(s) + 1e-3 for s in (5, 12, 40, 100, 9)]
+    hs = pool.insert_many(tenants, method="alias")
+    assert all(h.method == "alias" for h in hs)
+    for h, w in zip(hs, tenants):
+        wn = normalize_weights(np.asarray(w, np.float64))
+        padded = np.pad(wn, (0, h.size_class - len(wn))).astype(np.float32)
+        solo = build_alias_batched(jnp.asarray(padded[None]))
+        t = pool.alias_row(h)
+        assert np.array_equal(np.asarray(t.q), np.asarray(solo.q[0]))
+        assert np.array_equal(np.asarray(t.alias), np.asarray(solo.alias[0]))
+    st_ = pool.stats()
+    assert st_["tenants"] == len(tenants)
+    assert st_["classes"] == {}  # no forest arena was ever touched
+    assert sum(c["occupied"] for c in st_["alias_classes"].values()) == len(tenants)
+
+
+def test_pool_alias_lifecycle_invariants():
+    """Free-list reuse bumps versions; stale alias handles raise on every
+    entry point; evict zeroes the packed row; method mismatch raises."""
+    rng = np.random.default_rng(4)
+    pool = ForestPool()
+    hs = pool.insert_many([rng.random(10) + 1e-3 for _ in range(3)],
+                          method="alias")
+    victim = hs[1]
+    row = victim.row
+    pool.evict(victim)
+    ar = pool.alias_classes[victim.size_class]
+    assert not np.asarray(ar.table.q[row]).any()       # cleared
+    assert not np.asarray(ar.table.alias[row]).any()
+    for fn in (
+        lambda: pool.sample([victim], [0.5]),
+        lambda: pool.update_weights(victim, rng.random(10)),
+        lambda: pool.alias_row(victim),
+        lambda: pool.evict(victim),
+    ):
+        with pytest.raises(ValueError):
+            fn()
+    reused = pool.insert(rng.random(12) + 1e-3, method="alias")  # same class
+    assert reused.row == row and reused.version == victim.version + 1
+    with pytest.raises(ValueError):
+        pool.forest_row(reused)  # method mismatch routes to the other view
+    # padded mixed drain must not read the freed/reused row via padding
+    out = pool.sample([hs[0], hs[2], reused] * 5,
+                      rng.random(15).astype(np.float32))
+    assert np.all(out >= 0)
+    assert np.all(out[2::3] < reused.n)
+
+
+def test_pool_alias_update_weights_rebuild_and_skip():
+    rng = np.random.default_rng(5)
+    pool = ForestPool()
+    w = rng.random(20) + 1e-3
+    h = pool.insert(w, method="alias")
+    pool.update_weights(h, w)  # identical weights: padded row bits unchanged
+    ar = pool.alias_classes[h.size_class]
+    assert ar.skips == 1 and ar.rebuilds == 0
+    delta = np.zeros(20)
+    delta[3] = 0.7
+    pool.update_weights(h, delta=delta)
+    assert ar.rebuilds == 1
+    new_w = normalize_weights(np.asarray(w, np.float64) + delta)
+    padded = np.pad(new_w, (0, h.size_class - 20)).astype(np.float32)
+    solo = build_alias_batched(jnp.asarray(padded[None]))
+    t = pool.alias_row(h)
+    assert np.array_equal(np.asarray(t.q), np.asarray(solo.q[0]))
+    assert np.array_equal(np.asarray(t.alias), np.asarray(solo.alias[0]))
+
+
+def test_pool_mixed_method_drain_matches_per_row_oracles():
+    """One drain over interleaved forest/alias tenants of several size
+    classes: alias lanes match the float32 numpy alias oracle, forest lanes
+    match the pool's own forest-only drain — method routing cannot leak
+    lanes across arenas."""
+    rng = np.random.default_rng(6)
+    pool = ForestPool()
+    hf = pool.insert_many([rng.random(s) + 1e-3 for s in (6, 30, 90)])
+    ha = pool.insert_many([rng.random(s) + 1e-3 for s in (6, 30, 90)],
+                          method="alias")
+    handles = [hf[0], ha[0], hf[1], ha[1], hf[2], ha[2]] * 50
+    xi = rng.random(len(handles)).astype(np.float32)
+    out = pool.sample(handles, xi, use_pallas=True)
+    assert np.array_equal(out, pool.sample(handles, xi, use_pallas=False))
+    for i, (h, x) in enumerate(zip(handles, xi)):
+        if h.method == "alias":
+            t = pool.alias_row(h)
+            want = int(np_sample_alias_f32(
+                np.asarray(t.q), np.asarray(t.alias), np.array([x])
+            )[0])
+            assert out[i] == min(want, h.n - 1), i
+    fmask = np.array([h.method == "forest" for h in handles])
+    fonly = pool.sample([h for h in handles if h.method == "forest"], xi[fmask])
+    assert np.array_equal(out[fmask], fonly)
+
+
+def test_forest_drains_unchanged_by_alias_tenants():
+    """Method selection is additive: a pool carrying alias tenants drains
+    its forest tenants bit-identically to a pool that never admitted any."""
+    rng = np.random.default_rng(8)
+    tenants = [rng.random(s) + 1e-3 for s in (5, 20, 70, 200)]
+    pool_a, pool_b = ForestPool(), ForestPool()
+    hs_a = pool_a.insert_many(tenants)
+    hs_b = pool_b.insert_many(tenants)
+    pool_b.insert_many([rng.random(s) + 1e-3 for s in (7, 33)], method="alias")
+    qh = [rng.integers(0, len(tenants)) for _ in range(400)]
+    xi = rng.random(400).astype(np.float32)
+    out_a = pool_a.sample([hs_a[i] for i in qh], xi)
+    out_b = pool_b.sample([hs_b[i] for i in qh], xi)
+    assert np.array_equal(out_a, out_b)
+
+
+def test_pool_alias_drain_chi_square():
+    """Per-tenant GOF through the batched alias drain (mirror of the
+    forest pool's mixed-batch chi-square): each tenant's draws follow its
+    own distribution."""
+    rng = np.random.default_rng(9)
+    pool = ForestPool()
+    tenants = [
+        normalize_weights(rng.random(17) + 1e-2),
+        normalize_weights(rng.random(40) ** 4 + 1e-4),
+        normalize_weights(np.r_[np.ones(10), np.zeros(6)]),
+    ]
+    hs = pool.insert_many(tenants, method="alias")
+    per = 1 << 13
+    handles = [h for h in hs for _ in range(per)]
+    xi = rng.random(len(handles)).astype(np.float32)
+    out = pool.sample(handles, xi)
+    for t, (h, p) in enumerate(zip(hs, tenants)):
+        idx = out[t * per:(t + 1) * per]
+        counts = np.bincount(idx, minlength=len(p))
+        expect = p * per
+        live = expect > 0
+        assert np.all(counts[~live] == 0)
+        chi2 = np.sum((counts[live] - expect[live]) ** 2 / expect[live])
+        dof = live.sum()
+        assert chi2 < dof + 8 * np.sqrt(2 * dof), (t, chi2)
+
+
+def test_handle_default_method_is_forest():
+    """Back-compat: positional 4-field Handle construction still works and
+    means the forest path."""
+    h = Handle(8, 0, 5, 0)
+    assert h.method == "forest"
+
+
+# ------------------------------------------------------------ serve layer
+
+
+def test_pooled_sampler_auto_method_by_stream_kind():
+    from repro.serve import PooledForestSampler
+
+    rng = np.random.default_rng(10)
+    w = rng.random(12) + 1e-3
+    pq = PooledForestSampler(n_slots=4, use_pallas=False)
+    pp = PooledForestSampler(n_slots=4, use_pallas=False, streams="prng")
+    assert pq.add(w).method == "forest"
+    assert pp.add(w).method == "alias"
+    assert pq.add(w, method="alias").method == "alias"   # explicit overrides
+    assert pp.add(w, method="forest").method == "forest"
+    with pytest.raises(ValueError):
+        PooledForestSampler(streams="sobol")
+    # per-tenant method sequences thread through add_many
+    hs = pp.add_many([w, w, w], method=["auto", "forest", "alias"])
+    assert [h.method for h in hs] == ["alias", "forest", "alias"]
+    out = pp.sample(hs * 8, np.tile(np.arange(3), 8) % 4)
+    assert np.all((0 <= out) & (out < 12))
+
+
+def test_pooled_sampler_qmc_mixed_methods_single_drain():
+    """A QMC sampler with explicitly-alias tenants still resolves the whole
+    batch in one pool call; draws stay in range and the forest lanes match
+    the host-stream oracle."""
+    from repro.serve import PooledForestSampler
+    from repro.serve.sampler import QmcStreams
+
+    rng = np.random.default_rng(11)
+    ps = PooledForestSampler(n_slots=8, seed=2, use_pallas=False)
+    hf = ps.add(rng.random(20) + 1e-3)              # auto -> forest
+    ha = ps.add(rng.random(20) + 1e-3, method="alias")
+    handles = [hf, ha] * 32
+    slots = rng.integers(0, 8, 64)
+    out = ps.sample(handles, slots)
+    assert np.all((0 <= out) & (out < 20))
+    # forest lanes == a forest-only sampler fed the same stream points
+    ps2 = PooledForestSampler(n_slots=8, seed=2, use_pallas=False,
+                              device_streams=False)
+    hf2 = ps2.add(rng.random(20) + 1e-3)
+    host = QmcStreams(8, seed=2)
+    xi = host.next(slots)
+    want = ps2.pool.sample([hf2] * 64, xi)
+    got2 = ps2.sample([hf2] * 64, slots)
+    assert np.array_equal(got2, want)
+    # and the device-stream sampler's counters advanced exactly like the
+    # host oracle's despite the mixed-method drain
+    assert np.array_equal(np.asarray(ps.streams.counters),
+                          np.asarray(host.counters))
+
+
+def test_engine_threads_per_request_method():
+    from repro.serve import PooledForestSampler, Request, ServeEngine
+
+    rng = np.random.default_rng(12)
+    eng = ServeEngine(
+        params=None, cfg=None, n_slots=4, max_seq=32,
+        prior_sampler=PooledForestSampler(n_slots=4, use_pallas=False,
+                                          streams="prng"),
+    )
+    reqs = [
+        Request(rid=i, prompt=np.zeros(1, np.int64), max_new=5,
+                prior=rng.random(rng.integers(4, 30)) + 1e-3,
+                method=m)
+        for i, m in enumerate(["auto", "alias", "forest", "auto", "alias"])
+    ]
+    for r in reqs:
+        eng.submit(r)
+    # after first admission, live handles carry the resolved methods
+    eng.step()
+    methods = {eng.slots[s].rid: h.method
+               for s, h in eng.prior_handles.items()}
+    for r in reqs:
+        if r.rid in methods:
+            want = "alias" if r.method == "auto" else r.method  # prng streams
+            assert methods[r.rid] == want, r.rid
+    eng.run(max_steps=100)
+    assert all(r.done and len(r.out) == 5 for r in reqs)
+    assert all(all(0 <= t < len(r.prior) for t in r.out) for r in reqs)
