@@ -37,8 +37,10 @@ _NUM = re.compile(r"^-?\d+(\.\d+)?([eE][+-]?\d+)?$")
 # values are labels, not measurements, so each mix row is structural).
 # "method" names the per-slot sampling method of the paired forest-vs-alias
 # pool drain rows — losing either side of the pair IS a missing row.
+# "H"/"W" identify the 2-D map shape of the spatial (Map2D) sweep rows.
 _PARAMS = frozenset(
-    {"n", "m", "devices", "B", "tenants", "classes", "bucket", "mix", "method"}
+    {"n", "m", "devices", "B", "tenants", "classes", "bucket", "mix",
+     "method", "H", "W"}
 )
 
 

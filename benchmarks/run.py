@@ -27,6 +27,7 @@ def main() -> None:
         pool,
         sampling_throughput,
         serving_diversity,
+        spatial,
         table1,
     )
 
@@ -39,6 +40,8 @@ def main() -> None:
         ("Sampling throughput", sampling_throughput.main),
         ("Pool sampling", pool.main_sampling),
         ("Serving best-of-n diversity", serving_diversity.main),
+        ("Map2D construction", spatial.main_construction),
+        ("Map2D sampling", spatial.main_sampling),
     ]
     record: dict[str, dict] = {}
     for title, fn in sections:

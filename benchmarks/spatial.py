@@ -1,0 +1,151 @@
+"""2-D map serving benchmarks: the ``repro.spatial`` bulk pipeline vs the
+per-row loops it replaces (paper Sec. 5 / Fig. 8 served at bulk granularity).
+
+Sections (CSV; the structure gate pins rows and keys):
+
+  map2d_construction,H=...,W=...  — a :class:`Map2DSampler` build (marginal
+      forest + ONE ``build_forest_rows`` launch per pow2 width class) vs the
+      old loop: one marginal build + H per-row ``build_forest`` calls. The
+      ``launches`` column is the structural fact: classes + 1, independent
+      of H.
+  map2d_sampling,H=...,W=...  — a bulk ``sample_map`` drain (marginal
+      descent + one batched conditional launch per touched class) vs the
+      row-then-column reference looping ``sample_forest`` over every
+      distinct sampled row. ``launches`` vs ``distinct_rows`` is the
+      one-launch-per-class (never per-row) witness.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper_workloads import env_map_2d
+from repro.core import build_forest, sample_forest
+from repro.core.cdf import normalize_weights
+from repro.spatial import Map2DSampler
+
+
+def _time(fn, reps: int = 3) -> float:
+    fn()  # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps
+
+
+def run_construction(shapes=((16, 64), (64, 128))):
+    """Whole-map build: class-stacked multi-row launches vs H per-row
+    builds. Both sides normalize on the host and end device-synced."""
+    rows = []
+    for H, W in shapes:
+        img = env_map_2d(H, W)
+
+        def bulk():
+            s = Map2DSampler(img)
+            jax.block_until_ready(next(iter(s.classes.values())).forest.left)
+
+        def loop():
+            build_forest(jnp.asarray(normalize_weights(img.sum(axis=1))), H)
+            for r in range(H):
+                f = build_forest(jnp.asarray(normalize_weights(img[r])), W)
+            jax.block_until_ready(f.left)
+
+        t_b = _time(bulk)
+        t_l = _time(loop)
+        sampler = Map2DSampler(img)
+        rows.append(
+            {
+                "H": H, "W": W,
+                "bulk_us": t_b * 1e6, "loop_us": t_l * 1e6,
+                "speedup": t_l / t_b,
+                "launches": len(sampler.classes) + 1,  # + the marginal
+            }
+        )
+    return rows
+
+
+def run_sampling(shapes=((16, 64), (64, 128)), draws: int = 1 << 14):
+    """Bulk drain vs the per-distinct-row reference loop. The reference
+    pre-builds every per-row forest (construction is the other section) —
+    the loop pays one ``sample_forest`` dispatch per distinct sampled row,
+    the bulk path one batched launch per touched size class."""
+    rows = []
+    rng = np.random.default_rng(0)
+    for H, W in shapes:
+        img = env_map_2d(H, W)
+        sampler = Map2DSampler(img)
+        pts = rng.random((draws, 2)).astype(np.float32)
+        u, v = jnp.asarray(pts[:, 0]), jnp.asarray(pts[:, 1])
+
+        wc = int(sampler._class_of[0])
+        marg = build_forest(
+            jnp.asarray(normalize_weights(img.sum(axis=1))),
+            sampler.m_marginal,
+        )
+        per_row = [
+            build_forest(
+                jnp.asarray(np.pad(normalize_weights(img[r]), (0, wc - W))),
+                wc,
+            )
+            for r in range(H)
+        ]
+
+        def bulk():
+            r, c, _, _ = sampler.sample_map(pts)
+            return c
+
+        def loop():
+            rr = np.asarray(sample_forest(marg, u), np.int64)
+            out = np.empty(draws, np.int64)
+            for r in np.unique(rr):
+                mask = rr == r
+                out[mask] = np.minimum(
+                    np.asarray(sample_forest(per_row[r], v[mask])), W - 1
+                )
+            return out
+
+        t_b = _time(bulk)
+        t_l = _time(loop)
+        ri, ci, _, _ = sampler.sample_map(pts)
+        distinct = len(np.unique(ri))
+        rows.append(
+            {
+                "H": H, "W": W,
+                "bulk_us": t_b * 1e6, "loop_us": t_l * 1e6,
+                "speedup": t_l / t_b,
+                "msps": draws / t_b / 1e6,
+                "launches": sampler.last_drain["launches"],
+                "distinct_rows": distinct,
+            }
+        )
+    return rows
+
+
+def main_construction() -> list[str]:
+    return [
+        f"map2d_construction,H={r['H']},W={r['W']},"
+        f"bulk_us={r['bulk_us']:.0f},loop_us={r['loop_us']:.0f},"
+        f"bulk_vs_loop={r['speedup']:.2f},launches={r['launches']}"
+        for r in run_construction()
+    ]
+
+
+def main_sampling() -> list[str]:
+    return [
+        f"map2d_sampling,H={r['H']},W={r['W']},"
+        f"bulk_us={r['bulk_us']:.0f},loop_us={r['loop_us']:.0f},"
+        f"bulk_vs_loop={r['speedup']:.2f},Msamples_s={r['msps']:.2f},"
+        f"launches={r['launches']},distinct_rows={r['distinct_rows']}"
+        for r in run_sampling()
+    ]
+
+
+def main() -> list[str]:
+    return main_construction() + main_sampling()
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -2,6 +2,16 @@
 forest (monotone, row-then-column) vs the Alias Method, on a low-discrepancy
 point set. Writes PGM images of the sampled histograms + prints errors.
 
+The forest branch runs through :class:`repro.spatial.Map2DSampler`: ONE
+multi-row builder launch replaces the old per-row Python build loop, and the
+whole point set resolves in one bulk ``sample_map`` drain (marginal descent
++ one batched conditional launch per size class). The alias branch gets the
+same treatment via the fused batched alias build + one bulk drain. A
+differential gate asserts the bulk path reproduces the per-row
+row-then-column reference elementwise — with exact zero-mass-row semantics
+(no ``+ 1e-18`` fudge: an empty row's marginal interval has zero width, so
+no uniform can select it).
+
   PYTHONPATH=src python examples/density_map_sampling.py [--n 16384]
 """
 import argparse
@@ -14,6 +24,9 @@ from repro.configs.paper_workloads import env_map_2d
 from repro.core import build_alias, build_forest, np_sample_alias, quadratic_error, sample_forest
 from repro.core.cdf import normalize_weights
 from repro.core.lds import sobol
+from repro.kernels import ops
+from repro.pool import build_alias_batched, sample_alias_batched
+from repro.spatial import Map2DSampler
 
 
 def write_pgm(path: str, img: np.ndarray) -> None:
@@ -36,24 +49,45 @@ def main() -> None:
     img = env_map_2d(h, w)
     p_flat = (img / img.sum()).ravel()
     pts = sobol(n, dims=2).astype(np.float32)
+    use_pallas = ops.use_pallas_default()
 
-    rows_w = normalize_weights(img.sum(axis=1))
-    f_rows = build_forest(jnp.asarray(rows_w), h)
-    ri = np.asarray(sample_forest(f_rows, jnp.asarray(pts[:, 0])))
-    ci = np.empty(n, np.int64)
-    for r in np.unique(ri):
-        mask = ri == r
-        f_col = build_forest(jnp.asarray(normalize_weights(img[r] + 1e-18)), w)
-        ci[mask] = np.asarray(sample_forest(f_col, jnp.asarray(pts[mask, 1])))
-    inv_counts = np.bincount(ri * w + ci, minlength=h * w).reshape(h, w)
+    # ---- forest branch: the bulk 2-D pipeline (no per-row build loop)
+    sampler = Map2DSampler(img)
+    ri, ci, _, _ = sampler.sample_map(pts)
+    inv_counts = np.bincount(
+        sampler.flat_index(ri, ci), minlength=h * w
+    ).reshape(h, w)
 
-    a_rows = build_alias(rows_w)
-    ra = np_sample_alias(np.asarray(a_rows.q, np.float64), np.asarray(a_rows.alias), pts[:, 0])
-    ca = np.empty(n, np.int64)
-    for r in np.unique(ra):
-        mask = ra == r
-        t = build_alias(normalize_weights(img[r] + 1e-18))
-        ca[mask] = np_sample_alias(np.asarray(t.q, np.float64), np.asarray(t.alias), pts[mask, 1])
+    # Differential gate: the old row-then-column per-row loop, minus the
+    # 1e-18 epsilon (zero-mass rows are exactly unselectable now). Class
+    # rows behave exactly like build_forest over the pow2-padded row, so
+    # the oracle builds at the class width; the bulk path must match
+    # ELEMENTWISE — same rows, same columns, hence the same histogram.
+    wc = int(sampler._class_of[0])
+    f_rows = build_forest(jnp.asarray(normalize_weights(img.sum(axis=1))), h)
+    rr = np.asarray(sample_forest(f_rows, jnp.asarray(pts[:, 0])))
+    assert np.array_equal(rr, ri), "bulk marginal diverged from reference"
+    cr = np.empty(n, np.int64)
+    for r in np.unique(rr):
+        mask = rr == r
+        wpad = np.pad(normalize_weights(img[r]), (0, wc - w))
+        f_col = build_forest(jnp.asarray(wpad), wc)
+        cr[mask] = np.minimum(
+            np.asarray(sample_forest(f_col, jnp.asarray(pts[mask, 1]))), w - 1
+        )
+    assert np.array_equal(cr, ci), "bulk conditional diverged from reference"
+
+    # ---- alias branch: fused batched build + one bulk drain (loop killed)
+    a_rows = build_alias(normalize_weights(img.sum(axis=1)))
+    ra = np_sample_alias(
+        np.asarray(a_rows.q, np.float64), np.asarray(a_rows.alias), pts[:, 0]
+    )
+    cond = np.stack([normalize_weights(img[r]) for r in range(h)])
+    tbl = build_alias_batched(jnp.asarray(cond), use_pallas=use_pallas)
+    ca = np.asarray(sample_alias_batched(
+        tbl, jnp.asarray(ra, jnp.int32), jnp.asarray(pts[:, 1]),
+        use_pallas=use_pallas,
+    ))
     ali_counts = np.bincount(ra * w + ca, minlength=h * w).reshape(h, w)
 
     out = Path(args.out)
@@ -65,6 +99,7 @@ def main() -> None:
     e_ali = quadratic_error(ali_counts.ravel(), p_flat)
     print(f"n={n}: quadratic error inverse={e_inv:.3e} alias={e_ali:.3e} "
           f"(alias/inverse = {e_ali / max(e_inv, 1e-30):.2f}x)")
+    print(f"forest drain: {sampler.last_drain}")
     print(f"wrote {out}/target.pgm, inverse.pgm, alias.pgm")
 
 

@@ -5,7 +5,11 @@
 One distribution, many draws is the paper's amortized workload; for the
 multi-tenant twin (thousands of small per-request distributions, batched
 construction + bulk mixed-batch sampling via ``repro.pool``) see
-``examples/pool_serving.py``.
+``examples/pool_serving.py``. For the 2-D walkthrough — the paper's
+environment-map application served as a row marginal plus pow2-size-class
+conditional stacks (``repro.spatial.Map2DSampler``, one multi-row build
+launch per class, one bulk ``sample_map`` drain) — see
+``examples/density_map_sampling.py``.
 """
 import numpy as np
 import jax.numpy as jnp

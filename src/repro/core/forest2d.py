@@ -13,6 +13,25 @@ every row tree of a 2-D distribution (H rows x W columns => H*W leaves, H*m
 guide cells), with the same perfect load balancing as the 1-D case. This
 replaces the per-row Python build loop in the env-map workload (paper's
 target application: HDR environment maps, one CDF per image row).
+
+Every per-row quantity is a pure function of that row's data (crossing
+separators carry the sentinel distance, so the nearest-greater searches
+never escape a row), which buys two properties the 2-D serving layer
+(:mod:`repro.spatial`) builds on:
+
+* **Per-row bit-identity.** Row ``r`` of the flat build carries exactly the
+  arrays of an independent ``core.build_forest`` over that row's CDF —
+  including the per-(row, cell) degenerate-cell ``fallback`` flags computed
+  here with the same saturating parent-chase as the 1-D builder.
+  :func:`repro.pool.batched.batched_from_row_forest` rewrites the flat
+  global references into row-local ones and the result is bit-equal to B
+  stacked single builds (the spatial conformance suite pins this), so the
+  one-pass builder can feed the fixed-trip batched descent kernel
+  (:func:`repro.kernels.forest_sample.forest_sample_batched`).
+* **Row-sparse rebuilds.** Because rows never interact, rebuilding a dirty
+  subset of rows and scattering the rows into a stacked forest is bit-equal
+  to a from-scratch build of the whole stack — the ``update_map`` delta
+  path of :class:`repro.spatial.Map2DSampler` rests on exactly this.
 """
 from __future__ import annotations
 
@@ -25,7 +44,7 @@ import numpy as np
 
 from .bits import DIST_SENTINEL
 from .cdf import lower_bounds
-from .forest import INVALID, MAX_DEPTH, _nearest_greater
+from .forest import _DEPTH_ITERS, INVALID, MAX_DEPTH, _nearest_greater
 from .bits import float_to_bits
 
 
@@ -38,10 +57,13 @@ class RowForest(NamedTuple):
     rows: int
     width: int
     m: int
+    fallback: jax.Array | None = None  # (R*m,) bool degenerate (row, cell)
 
 
-@functools.partial(jax.jit, static_argnames=("m",))
-def build_forest_rows(cdf_rows: jax.Array, m: int) -> RowForest:
+@functools.partial(jax.jit, static_argnames=("m", "fallback_slack"))
+def build_forest_rows(
+    cdf_rows: jax.Array, m: int, fallback_slack: int = 2
+) -> RowForest:
     """cdf_rows (R, W+1) per-row CDFs -> all R forests in one pass."""
     R, W1 = cdf_rows.shape
     W = W1 - 1
@@ -79,30 +101,44 @@ def build_forest_rows(cdf_rows: jax.Array, m: int) -> RowForest:
 
     left = jnp.full((n,), INVALID, jnp.int32)
     right = jnp.full((n,), INVALID, jnp.int32)
+    leaf_parent = jnp.full((n,), -1, jnp.int32)
+    node_parent = jnp.full((n,), -1, jnp.int32)
 
-    dL, _L, dR, _R = _nearest_greater(d)
-    k = jnp.arange(n - 1, dtype=jnp.int32)
-    in_cell = ~crossing
-    is_root = in_cell & (dL == sentinel) & (dR == sentinel)
-    par_is_L = dL <= dR
-    parent_node = jnp.where(par_is_L, _L, _R) + 1
-    node_id = k + 1
-    wr = in_cell & ~is_root & par_is_L
-    wl = in_cell & ~is_root & ~par_is_L
-    right = right.at[jnp.where(wr, parent_node, n)].set(node_id, mode="drop")
-    left = left.at[jnp.where(wl, parent_node, n)].set(node_id, mode="drop")
-    root_slot = first_leaf[cells[jnp.clip(k, 0, n - 1)]]
-    right = right.at[jnp.where(is_root, root_slot, n)].set(node_id, mode="drop")
+    if n > 1:
+        dL, _L, dR, _R = _nearest_greater(d)
+        k = jnp.arange(n - 1, dtype=jnp.int32)
+        in_cell = ~crossing
+        is_root = in_cell & (dL == sentinel) & (dR == sentinel)
+        par_is_L = dL <= dR
+        parent_node = jnp.where(par_is_L, _L, _R) + 1
+        node_id = k + 1
+        wr = in_cell & ~is_root & par_is_L
+        wl = in_cell & ~is_root & ~par_is_L
+        right = right.at[jnp.where(wr, parent_node, n)].set(node_id, mode="drop")
+        left = left.at[jnp.where(wl, parent_node, n)].set(node_id, mode="drop")
+        node_parent = node_parent.at[
+            jnp.where(in_cell & ~is_root, k + 1, n)
+        ].set(parent_node, mode="drop")
+        root_slot = first_leaf[cells[jnp.clip(k, 0, n - 1)]]
+        right = right.at[jnp.where(is_root, root_slot, n)].set(node_id, mode="drop")
+        node_parent = node_parent.at[jnp.where(is_root, k + 1, n)].set(
+            root_slot, mode="drop"
+        )
 
     i = jnp.arange(n, dtype=jnp.int32)
-    dl = jnp.where(i > 0, d[jnp.clip(i - 1, 0)], sentinel)
-    dr = jnp.where(i < n - 1, d[jnp.clip(i, 0, max(n - 2, 0))], sentinel)
+    if n > 1:
+        dl = jnp.where(i > 0, d[jnp.clip(i - 1, 0)], sentinel)
+        dr = jnp.where(i < n - 1, d[jnp.clip(i, 0, max(n - 2, 0))], sentinel)
+    else:
+        dl = jnp.full((n,), sentinel, jnp.uint32)
+        dr = jnp.full((n,), sentinel, jnp.uint32)
     lone = (dl == sentinel) & (dr == sentinel)
     lpar_left = dl <= dr
     lparent = jnp.where(lpar_left, i, i + 1)
     right = right.at[jnp.where(~lone & lpar_left, lparent, n)].set(~i, mode="drop")
     left = left.at[jnp.where(~lone & ~lpar_left, lparent, n)].set(~i, mode="drop")
     right = right.at[jnp.where(lone, i, n)].set(~i, mode="drop")
+    leaf_parent = jnp.where(lone, i, lparent)
 
     # manual left child: previous interval IN THE SAME ROW (clamp at row start)
     nonempty = counts > 0
@@ -113,7 +149,25 @@ def build_forest_rows(cdf_rows: jax.Array, m: int) -> RowForest:
     table = jnp.where(
         counts == 0, ~cell_first[:-1], jnp.where(overlap == 1, ~f_safe, f_safe)
     ).astype(jnp.int32)
-    return RowForest(data, table, left, right, cell_first, R, W, m)
+
+    # Traversal depth per leaf -> per-(row, cell) fallback flags: the same
+    # saturating parent chase as the 1-D builder (core.forest._build_cell_
+    # trees), so the flags are bit-identical per row — chases never cross a
+    # row because every parent edge stays inside its cell.
+    depth = jnp.zeros((n,), jnp.int32)
+    anc = leaf_parent
+    for _ in range(_DEPTH_ITERS):
+        live = anc >= 0
+        depth = depth + live.astype(jnp.int32)
+        anc = jnp.where(live, node_parent[jnp.clip(anc, 0)], anc)
+    depth = depth + 1  # the leaf resolution step itself
+
+    cell_depth = jnp.zeros((n_cells,), jnp.int32).at[cells].max(depth)
+    allowed = jnp.ceil(jnp.log2(jnp.maximum(overlap, 2).astype(jnp.float32)))
+    fallback = (overlap > 1) & (
+        cell_depth > allowed.astype(jnp.int32) + fallback_slack
+    )
+    return RowForest(data, table, left, right, cell_first, R, W, m, fallback)
 
 
 @functools.partial(jax.jit, static_argnames=())

@@ -111,6 +111,82 @@ def qmc_point(counter, offset_bits):
     return qmc_bits24(counter, offset_bits).astype(jnp.float32) * QMC_SCALE
 
 
+def _sobol2_v24() -> np.ndarray:
+    """Sobol' dimension-1 direction numbers on the 24-bit stream grid."""
+    return (_sobol_directions(1) >> np.uint64(32 - QMC_BITS)).astype(np.uint32)
+
+
+def sobol2_bits24_np(counter: np.ndarray) -> np.ndarray:
+    """Counter -> unrotated Sobol' dim-1 point in units of 2^-24 (numpy).
+
+    Direct binary indexing (XOR of direction numbers for set counter bits);
+    the pipeline is pure integer XOR/shift so the jnp twin
+    (:func:`sobol2_bits24`) is bit-identical by construction. Together with
+    the van der Corput u-dimension of :func:`qmc_bits24_np` (= Sobol' dim 0)
+    this forms the exact 2-D Sobol' pair used by the spatial serving
+    streams."""
+    c = np.asarray(counter, np.uint32)
+    v = _sobol2_v24()
+    x = np.zeros(c.shape, np.uint32)
+    for k in range(32):
+        bit = (c >> np.uint32(k)) & np.uint32(1)
+        x ^= bit * v[k]
+    return x & _QMC_MASK
+
+
+def qmc2_bits24_np(
+    counter: np.ndarray, offset_u: np.ndarray, offset_v: np.ndarray
+):
+    """Counter -> rotated 2-D stream point (integer form, numpy host side).
+
+    u is the base-2 radical inverse, v is Sobol' dim 1; each carries its own
+    Cranley-Patterson rotation as an integer add mod 2^24, so host, jnp and
+    kernel twins agree bit-for-bit."""
+    u = qmc_bits24_np(counter, offset_u)
+    v = (sobol2_bits24_np(counter) + np.asarray(offset_v, np.uint32)) & _QMC_MASK
+    return u, v
+
+
+def qmc2_point_np(
+    counter: np.ndarray, offset_u: np.ndarray, offset_v: np.ndarray
+):
+    """Rotated 2-D stream point as exact float32 pairs in [0, 1)^2."""
+    u, v = qmc2_bits24_np(counter, offset_u, offset_v)
+    return u.astype(np.float32) * QMC_SCALE, v.astype(np.float32) * QMC_SCALE
+
+
+def sobol2_bits24(counter):
+    """jnp twin of :func:`sobol2_bits24_np` (identical integer pipeline)."""
+    import jax.numpy as jnp
+
+    c = jnp.asarray(counter, jnp.uint32)
+    v = _sobol2_v24()
+    x = jnp.zeros_like(c)
+    for k in range(32):
+        bit = (c >> jnp.uint32(k)) & jnp.uint32(1)
+        x = x ^ bit * jnp.uint32(int(v[k]))
+    return x & jnp.uint32(_QMC_MASK)
+
+
+def qmc2_bits24(counter, offset_u, offset_v):
+    """jnp twin of :func:`qmc2_bits24_np`."""
+    import jax.numpy as jnp
+
+    u = qmc_bits24(counter, offset_u)
+    v = (sobol2_bits24(counter) + jnp.asarray(offset_v, jnp.uint32)) & jnp.uint32(
+        _QMC_MASK
+    )
+    return u, v
+
+
+def qmc2_point(counter, offset_u, offset_v):
+    """jnp twin of :func:`qmc2_point_np` (exact float32 in [0, 1)^2)."""
+    import jax.numpy as jnp
+
+    u, v = qmc2_bits24(counter, offset_u, offset_v)
+    return u.astype(jnp.float32) * QMC_SCALE, v.astype(jnp.float32) * QMC_SCALE
+
+
 def radical_inverse_base2(i: np.ndarray) -> np.ndarray:
     """Van der Corput sequence in base 2 via 32-bit reversal (float32 exact)."""
     b = reverse_bits32_np(np.asarray(i, np.uint32))

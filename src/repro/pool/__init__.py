@@ -6,6 +6,7 @@ from .arena import AliasArena, ForestPool, Handle
 from .batched import (
     BatchedAlias,
     BatchedForest,
+    batched_from_row_forest,
     build_alias_batched,
     build_forest_batched,
     build_forest_batched_from_cdf,
@@ -19,6 +20,7 @@ __all__ = [
     "BatchedForest",
     "ForestPool",
     "Handle",
+    "batched_from_row_forest",
     "build_alias_batched",
     "build_forest_batched",
     "build_forest_batched_from_cdf",

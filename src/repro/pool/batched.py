@@ -120,6 +120,50 @@ def build_forest_batched(
     return BatchedForest(*f)
 
 
+@jax.jit
+def batched_from_row_forest(rows, cdf_rows: jax.Array) -> BatchedForest:
+    """Rewrap a flat :class:`repro.core.forest2d.RowForest` as a
+    :class:`BatchedForest` — one-pass multi-row construction feeding the
+    batched descent kernel.
+
+    The flat builder emits *global* references (leaf ``~i`` and node ids
+    index the flat ``(R*W,)`` arrays, guide entries index ``(R*m,)`` cells);
+    the batched kernel wants *row-local* ones. Because row ``r``'s nodes and
+    leaves all live in ``[r*W, (r+1)*W)``, the rewrite is a per-row offset
+    subtraction: for a reference ``v`` in row ``r`` with ``off = r*W``,
+    ``local = v - off`` when ``v >= 0`` (node id) and ``v + off`` when
+    ``v < 0`` (leaf, since ``~(i - off) = ~i + off``). Row ``r`` of the
+    result is bit-identical to ``forest_from_cdf(cdf_rows[r], m)`` — the
+    spatial conformance suite pins this, fallback flags included.
+
+    ``cdf_rows`` must be the exact ``(R, W+1)`` CDF stack the RowForest was
+    built from: the batched kernel compares against the *unclamped* CDF
+    (matching single builds), not the clamped flat ``data``."""
+    R, W1 = cdf_rows.shape  # static, unlike the RowForest int leaves
+    W = W1 - 1
+    m = rows.table.shape[0] // R
+    off = (jnp.arange(R, dtype=jnp.int32) * W)[:, None]
+
+    def local(v):
+        return jnp.where(v >= 0, v - off, v + off)
+
+    cell_first = jnp.concatenate(
+        [
+            rows.cell_first[:-1].reshape(R, m) - off,
+            jnp.full((R, 1), W - 1, jnp.int32),
+        ],
+        axis=1,
+    )
+    return BatchedForest(
+        cdf=jnp.asarray(cdf_rows, jnp.float32),
+        table=local(rows.table.reshape(R, m)),
+        left=local(rows.left.reshape(R, W)),
+        right=local(rows.right.reshape(R, W)),
+        cell_first=cell_first,
+        fallback=rows.fallback.reshape(R, m),
+    )
+
+
 def sample_forest_batched(
     forest: BatchedForest,
     dist_id: jax.Array,

@@ -1,16 +1,24 @@
 from .engine import Request, ServeEngine
 from .sampler import (
+    DeviceQmc2Streams,
+    DeviceQmcStreams,
     ForestSampler,
     PooledForestSampler,
+    Qmc2Streams,
     QmcStreams,
+    SpatialSampler,
     TokenSampler,
 )
 
 __all__ = [
     "Request",
     "ServeEngine",
+    "DeviceQmc2Streams",
+    "DeviceQmcStreams",
     "ForestSampler",
     "PooledForestSampler",
+    "Qmc2Streams",
     "QmcStreams",
+    "SpatialSampler",
     "TokenSampler",
 ]

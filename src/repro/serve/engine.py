@@ -16,6 +16,14 @@ launch per touched size class, and retirement evicts the tenant (slot
 handles are versioned, so churn can never sample a stale distribution).
 With ``params=None`` the engine serves pure categorical traffic — the
 paper's millions-of-users scenario with no LM in the loop.
+
+2-D path: a request may instead carry ``Request.prior2d`` — an
+environment/density map sampled as row-marginal x per-row conditional
+(the paper's Sec. 5 application). All such requests share ONE
+:class:`~repro.serve.sampler.SpatialSampler` (the map is a shared static
+asset, like the model weights; per-request maps belong in the pool path as
+flattened priors), every step drains ALL 2-D slots with one bulk
+``sample_map`` call, and each emitted "token" is the flat texel id.
 """
 from __future__ import annotations
 
@@ -29,7 +37,7 @@ import jax.numpy as jnp
 
 from repro.models.config import ModelConfig
 
-from .sampler import PooledForestSampler, TokenSampler
+from .sampler import PooledForestSampler, SpatialSampler, TokenSampler
 
 
 @dataclasses.dataclass
@@ -43,6 +51,9 @@ class Request:
     # QMC-safe), "alias" (packed O(1) tables, bulk PRNG traffic), or
     # "auto" — let the prior sampler pick by its stream kind
     method: str = "auto"
+    # 2-D map request: the engine's SHARED environment/density map (every
+    # prior2d request must carry the same map; tokens are flat texel ids)
+    prior2d: Any | None = None
     out: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
 
@@ -50,7 +61,8 @@ class Request:
 class ServeEngine:
     def __init__(self, params: Any, cfg: ModelConfig | None, n_slots: int = 8,
                  max_seq: int = 512, sampler: TokenSampler | None = None,
-                 prior_sampler: PooledForestSampler | None = None):
+                 prior_sampler: PooledForestSampler | None = None,
+                 spatial_sampler: SpatialSampler | None = None):
         self.params = params
         self.cfg = cfg
         self.n_slots = n_slots
@@ -58,6 +70,8 @@ class ServeEngine:
         self.sampler = sampler or TokenSampler(n_slots=n_slots, use_pallas=False)
         self.prior_sampler = prior_sampler
         self.prior_handles: dict[int, Any] = {}  # slot -> pool Handle
+        self.spatial_sampler = spatial_sampler
+        self.spatial_slots: set[int] = set()  # slots on the 2-D map drain
         self.queue: deque[Request] = deque()
         self.slots: list[Request | None] = [None] * n_slots
         if params is not None:
@@ -71,12 +85,49 @@ class ServeEngine:
         self.steps = 0
 
     def submit(self, req: Request) -> None:
-        if req.prior is None and self.params is None:
+        if req.prior is not None and req.prior2d is not None:
+            raise ValueError("a request carries prior OR prior2d, not both")
+        if req.prior is None and req.prior2d is None and self.params is None:
             raise ValueError(
                 "engine has no model (params=None); submit prior-backed "
                 "requests only"
             )
         self.queue.append(req)
+
+    def _same_map(self, img) -> bool:
+        rows = [np.asarray(r, np.float64) for r in img]
+        have = self.spatial_sampler.map.rows_raw
+        return len(rows) == len(have) and all(
+            a.shape == b.shape and np.array_equal(a, b)
+            for a, b in zip(rows, have)
+        )
+
+    def _admit_spatial(self, admitted: list[tuple[int, Request]]) -> None:
+        """2-D admission wave: the engine's map is a shared static asset —
+        the first ``prior2d`` request instantiates the
+        :class:`SpatialSampler`; later requests must carry the identical
+        map (a per-request map belongs in the pool path). The wave draws
+        its first texels in one bulk ``sample_map`` drain."""
+        if self.spatial_sampler is None:
+            self.spatial_sampler = SpatialSampler(
+                admitted[0][1].prior2d, n_slots=self.n_slots,
+                use_pallas=False,
+            )
+        for s, req in admitted:
+            if not self._same_map(req.prior2d):
+                self.slots[s] = None
+                raise ValueError(
+                    f"request {req.rid}: prior2d differs from the engine's "
+                    "shared map; per-request distributions go through "
+                    "Request.prior (the pool path)"
+                )
+            self.spatial_slots.add(s)
+        slots = np.asarray([s for s, _ in admitted])
+        toks = self.spatial_sampler.sample_flat(slots)
+        for (s, req), tok in zip(admitted, toks):
+            self.pos[s] = 0
+            self.last_tok[s] = int(tok)
+            req.out.append(int(tok))
 
     def _admit_priors(self, admitted: list[tuple[int, Request]]) -> None:
         """Prior-backed admission wave: no prefill, no KV — the whole wave
@@ -102,12 +153,16 @@ class ServeEngine:
 
     def _admit(self) -> None:
         priors: list[tuple[int, Request]] = []
+        spatial: list[tuple[int, Request]] = []
         for s in range(self.n_slots):
             if self.slots[s] is None and self.queue:
                 req = self.queue.popleft()
                 self.slots[s] = req
                 if req.prior is not None:
                     priors.append((s, req))
+                    continue
+                if req.prior2d is not None:
+                    spatial.append((s, req))
                     continue
                 from repro.models import prefill
 
@@ -131,6 +186,8 @@ class ServeEngine:
                 req.out.append(int(tok))
         if priors:
             self._admit_priors(priors)
+        if spatial:
+            self._admit_spatial(spatial)
 
     def _retire(self) -> None:
         for s, req in enumerate(self.slots):
@@ -139,8 +196,9 @@ class ServeEngine:
             if (
                 len(req.out) >= req.max_new
                 or (req.eos is not None and req.out and req.out[-1] == req.eos)
-                # max_seq is a KV budget; prior-backed slots hold no KV
+                # max_seq is a KV budget; prior/2-D-backed slots hold no KV
                 or (s not in self.prior_handles
+                    and s not in self.spatial_slots
                     and self.pos[s] >= self.max_seq - 1)
             ):
                 req.done = True
@@ -148,14 +206,21 @@ class ServeEngine:
                 h = self.prior_handles.pop(s, None)
                 if h is not None:
                     self.prior_sampler.remove(h)
+                # 2-D slots hold no pool handle — the map is shared; just
+                # leave the drain set (slot streams keep their counters)
+                self.spatial_slots.discard(s)
 
     def step(self) -> None:
         self._admit()
         active = [s for s, r in enumerate(self.slots) if r is not None]
         if not active:
             return
-        model_slots = [s for s in active if s not in self.prior_handles]
+        model_slots = [
+            s for s in active
+            if s not in self.prior_handles and s not in self.spatial_slots
+        ]
         prior_slots = [s for s in active if s in self.prior_handles]
+        spatial_slots = [s for s in active if s in self.spatial_slots]
         if model_slots:
             from repro.models import decode_step
 
@@ -189,6 +254,16 @@ class ServeEngine:
                 # doubles as decode_step's scatter index for EVERY row — a
                 # drifting pos would walk a prior slot's writes across (and
                 # eventually past) the max_seq cache budget.
+        if spatial_slots:
+            # the 2-D bulk drain: every map-backed slot resolves its next
+            # 2-D stream point through one sample_map call (marginal descent
+            # + one conditional launch per touched size class); the emitted
+            # token is the flat texel id. pos frozen at 0, as above.
+            toks = self.spatial_sampler.sample_flat(np.asarray(spatial_slots))
+            for i, s in enumerate(spatial_slots):
+                tok = int(toks[i])
+                self.slots[s].out.append(tok)
+                self.last_tok[s] = tok
         self._retire()
         self.steps += 1
 

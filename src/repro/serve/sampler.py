@@ -33,6 +33,8 @@ from repro.core.alias import build_alias, sample_alias
 from repro.core.cdf import normalize_weights, updated_weights
 from repro.core.lds import (
     QMC_SCALE,
+    qmc2_point,
+    qmc2_point_np,
     qmc_bits24_np,
     qmc_offset_bits_np,
     qmc_point,
@@ -163,6 +165,160 @@ class DeviceQmcStreams:
         if slots is None:
             slots = np.arange(self.n_slots)
         return np.asarray(self.draw(slots)[2])
+
+
+class Qmc2Streams:
+    """Per-slot 2-D low-discrepancy streams: the host oracle of the 2-D
+    stream pair. Dimension u is the base-2 radical inverse (Sobol' dim 0),
+    dimension v is Sobol' dim 1 — the exact 24-bit integer pipeline of
+    ``core.lds.qmc2_*`` — with independent per-slot Cranley-Patterson
+    rotations per dimension. One counter per slot drives both dimensions
+    (a 2-D stream point is ONE sequence element; advancing dimensions
+    separately would desynchronize the pair and destroy the 2-D
+    stratification). Same seed as :class:`DeviceQmc2Streams` => bit-equal
+    offsets, counters, and points."""
+
+    def __init__(self, n_slots: int, seed: int = 0):
+        rng = np.random.default_rng(seed)
+        self.offset_u = qmc_offset_bits_np(rng.random(n_slots))
+        self.offset_v = qmc_offset_bits_np(rng.random(n_slots))
+        self.counters = np.zeros(n_slots, np.uint32)
+
+    def next(self, slots: np.ndarray | None = None):
+        """One 2-D stream point per requested slot occurrence (duplicate
+        slots get distinct consecutive points — same rank protocol as
+        :class:`QmcStreams`). Returns ``(u, v)`` float32 arrays."""
+        if slots is None:
+            slots = np.arange(len(self.offset_u))
+        slots = np.asarray(slots)
+        rank = _occurrence_rank_np(slots)
+        ctr = self.counters[slots] + rank
+        u, v = qmc2_point_np(ctr, self.offset_u[slots], self.offset_v[slots])
+        np.add.at(self.counters, slots, 1)
+        return u, v
+
+
+@jax.jit
+def _stream_prepass2(counters: jax.Array, offset_u: jax.Array,
+                     offset_v: jax.Array, slots: jax.Array):
+    """Device twin of one ``Qmc2Streams.next`` drain as a single program —
+    the 2-D sibling of :func:`_stream_prepass` (same sentinel-slot padding
+    and duplicate-rank protocol, two rotated dimensions out)."""
+    S = counters.shape[0]
+    valid = slots >= 0
+    key = jnp.where(valid, slots, S)
+    order = jnp.argsort(key, stable=True)
+    sk = key[order]
+    first = jnp.searchsorted(sk, sk, side="left")
+    rank = jnp.zeros(slots.shape[0], jnp.uint32).at[order].set(
+        (jnp.arange(slots.shape[0]) - first).astype(jnp.uint32)
+    )
+    sl = jnp.where(valid, slots, 0)
+    ctr = jnp.where(valid, counters[sl] + rank, 0).astype(jnp.uint32)
+    ou = jnp.where(valid, offset_u[sl], 0).astype(jnp.uint32)
+    ov = jnp.where(valid, offset_v[sl], 0).astype(jnp.uint32)
+    u, v = qmc2_point(ctr, ou, ov)
+    new_counters = counters.at[sl].add(valid.astype(jnp.uint32))
+    return u, v, new_counters
+
+
+class DeviceQmc2Streams:
+    """Device-side twin of :class:`Qmc2Streams`: counters and both offset
+    vectors live as jax arrays; a drain advances them inside
+    :func:`_stream_prepass2` with zero host-side counter mutation. Same
+    seed as the host class => bit-equal points and counters (the spatial
+    differential suite pins this, duplicate slots included)."""
+
+    def __init__(self, n_slots: int, seed: int = 0):
+        rng = np.random.default_rng(seed)
+        self.offset_u = jnp.asarray(qmc_offset_bits_np(rng.random(n_slots)))
+        self.offset_v = jnp.asarray(qmc_offset_bits_np(rng.random(n_slots)))
+        self.counters = jnp.zeros(n_slots, jnp.uint32)
+
+    @property
+    def n_slots(self) -> int:
+        return int(self.offset_u.shape[0])
+
+    def draw(self, slots) -> tuple[jax.Array, jax.Array]:
+        """Advance every requested slot occurrence; returns the ``(u, v)``
+        point pair, each (Q,) float32 on device. Drain lengths pad to
+        pow2 (floor 64, sentinel slots) exactly like the 1-D streams."""
+        slots = np.asarray(slots)
+        Q = len(slots)
+        qpad = _pow2_at_least(Q, 64)
+        padded = np.full(qpad, -1, np.int32)
+        padded[:Q] = slots.astype(np.int32)
+        u, v, self.counters = _stream_prepass2(
+            self.counters, self.offset_u, self.offset_v, jnp.asarray(padded)
+        )
+        return u[:Q], v[:Q]
+
+    def next(self, slots: np.ndarray | None = None):
+        """Host-API-compatible drain (returns ``(u, v)`` as numpy)."""
+        if slots is None:
+            slots = np.arange(self.n_slots)
+        u, v = self.draw(slots)
+        return np.asarray(u), np.asarray(v)
+
+
+class SpatialSampler:
+    """2-D serving sampler: ONE shared environment/density map
+    (:class:`repro.spatial.Map2DSampler`) drained by per-slot 2-D QMC
+    streams — the paper's env-map application behind the serving API.
+
+    Each ``sample`` call draws one 2-D stream point per slot occurrence
+    (``streams="qmc"``: the exact 24-bit Sobol' pair with device-side
+    counters; ``streams="prng"``: a seeded PRNG baseline) and resolves the
+    whole batch through :meth:`~repro.spatial.Map2DSampler.sample_map` —
+    marginal descent on u, one batched conditional launch per touched size
+    class on v. Both warps are monotone, so the 2-D stratification of the
+    streams survives into texel space. :meth:`update` re-targets dirty map
+    rows in place; slot streams keep their counters, exactly as the 1-D
+    samplers do across distribution swaps."""
+
+    def __init__(self, img, n_slots: int = 64, seed: int = 0,
+                 streams: str = "qmc", device_streams: bool = True,
+                 use_pallas: bool | None = None, **map_kwargs):
+        from repro.spatial import Map2DSampler  # lazy: serve stays importable
+
+        if streams not in ("qmc", "prng"):
+            raise ValueError(f"streams must be 'qmc' or 'prng', got {streams!r}")
+        self.map = Map2DSampler(img, use_pallas=use_pallas, **map_kwargs)
+        self.stream_kind = streams
+        self.device_streams = device_streams and streams == "qmc"
+        if streams == "qmc":
+            self.streams = (
+                DeviceQmc2Streams(n_slots, seed) if device_streams
+                else Qmc2Streams(n_slots, seed)
+            )
+            self.rng = None
+        else:
+            self.streams = None
+            self.rng = np.random.default_rng(seed)
+
+    def _points(self, slots: np.ndarray):
+        if self.stream_kind == "prng":
+            pts = self.rng.random((len(slots), 2)).astype(np.float32)
+            return pts[:, 0], pts[:, 1]
+        u, v = self.streams.next(np.asarray(slots)) if not self.device_streams \
+            else self.streams.draw(np.asarray(slots))
+        return np.asarray(u), np.asarray(v)
+
+    def sample(self, slots: np.ndarray):
+        """One (row, col) texel per slot occurrence."""
+        u, v = self._points(np.asarray(slots))
+        r, c, _, _ = self.map.sample_map((u, v))
+        return r, c
+
+    def sample_flat(self, slots: np.ndarray) -> np.ndarray:
+        """One flat texel id per slot occurrence (the engine's token form)."""
+        r, c = self.sample(slots)
+        return self.map.flat_index(r, c)
+
+    def update(self, delta_rows: dict, *, delta: bool = False) -> dict:
+        """Patch dirty map rows in place (O(dirty rows); see
+        :meth:`repro.spatial.Map2DSampler.update_map`)."""
+        return self.map.update_map(delta_rows, delta=delta)
 
 
 class ForestSampler:

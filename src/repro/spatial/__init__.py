@@ -1,0 +1,5 @@
+"""2-D piecewise-constant serving: the paper's environment-map application
+(marginal-over-rows x conditional-per-row) at bulk batched granularity."""
+from .map2d import Map2DSampler
+
+__all__ = ["Map2DSampler"]

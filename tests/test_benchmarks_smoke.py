@@ -146,3 +146,19 @@ def test_serving_diversity_qmc_wins():
     rows = run(vocab=512, n=2048)
     assert rows["inverse_qmc"] < rows["inverse_prng"]
     assert rows["inverse_qmc"] < rows["alias_qmc"]
+
+
+def test_spatial_bench_runs():
+    from benchmarks.spatial import run_construction, run_sampling
+
+    rows = run_construction(shapes=((8, 16),))
+    assert rows[0]["bulk_us"] > 0 and rows[0]["loop_us"] > 0
+    # structural: one multi-row launch per class + the marginal, never H+1
+    assert rows[0]["launches"] < 8 + 1
+
+    rows = run_sampling(shapes=((8, 16),), draws=1 << 10)
+    r = rows[0]
+    assert r["bulk_us"] > 0 and r["msps"] > 0
+    # the one-launch-per-class (never per-distinct-row) witness
+    assert r["launches"] <= r["distinct_rows"]
+    assert r["launches"] == 1  # single class, unsharded: fused pipeline

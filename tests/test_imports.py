@@ -37,6 +37,8 @@ def test_module_list_is_nonempty():
     assert {"repro.pool", "repro.pool.arena", "repro.pool.batched"} <= set(
         MODULES
     )
+    # ...and so is the 2-D map serving subsystem
+    assert {"repro.spatial", "repro.spatial.map2d"} <= set(MODULES)
 
 
 @pytest.mark.parametrize("mod", MODULES)
