@@ -38,9 +38,11 @@ _NUM = re.compile(r"^-?\d+(\.\d+)?([eE][+-]?\d+)?$")
 # "method" names the per-slot sampling method of the paired forest-vs-alias
 # pool drain rows — losing either side of the pair IS a missing row.
 # "H"/"W" identify the 2-D map shape of the spatial (Map2D) sweep rows.
+# "guard" names the paired guarded-vs-unguarded drain rows (the invariant
+# check's price) — dropping either side of the pair IS a missing row.
 _PARAMS = frozenset(
     {"n", "m", "devices", "B", "tenants", "classes", "bucket", "mix",
-     "method", "H", "W"}
+     "method", "H", "W", "guard"}
 )
 
 

@@ -21,6 +21,13 @@ Sections (CSV; the structure gate pins rows and keys):
   pool_construction,alias_build_batched,...  — the fused split-and-pack
       alias build (one kernel launch over B stacked rows) vs a loop of B
       host ``build_alias_parallel`` calls.
+  pool_sampling,guard=...  — the SAME drain with and without the per-group
+      invariant guard (``sample(..., guard=True)`` cross-checks each
+      touched group's cdf/table before the launch): paired rows price the
+      integrity check against the unguarded fast path.
+  pool_snapshot,tenants=...  — serving-state durability: ``snapshot()``
+      (host copy), ``save_state`` (atomic commit to disk), ``restore()``
+      (arena rebuild), as us per operation at each tenant count.
 """
 from __future__ import annotations
 
@@ -207,6 +214,75 @@ def run_sampling_methods(tenants: int = 64, draws: int = 1 << 14):
     return rows
 
 
+def run_sampling_guard(tenants: int = 64, draws: int = 1 << 14):
+    """The invariant guard's price: the same mixed-class drain with
+    ``guard=True`` (per-group cdf/table cross-checks before each launch)
+    vs the unguarded fast path. Draws are identical either way."""
+    rng = np.random.default_rng(6)
+    pool = ForestPool()
+    sizes = rng.choice([16, 64, 256], size=tenants)
+    methods = ["forest" if i % 2 == 0 else "alias" for i in range(tenants)]
+    handles = pool.insert_many(
+        [rng.random(s) ** 6 + 1e-9 for s in sizes], method=methods
+    )
+    qh = [handles[i] for i in rng.integers(0, tenants, draws)]
+    xi = rng.random(draws).astype(np.float32)
+    rows = []
+    for label, guard in (("off", False), ("on", True)):
+        t = _time(lambda: pool.sample(qh, xi, guard=guard), reps=3)
+        rows.append(
+            {
+                "guard": label, "tenants": tenants,
+                "classes": len(pool.classes) + len(pool.alias_classes),
+                "us": t * 1e6, "msps": draws / t / 1e6,
+            }
+        )
+    return rows
+
+
+def run_snapshot(tenant_counts=(16, 64)):
+    """Serving-state durability cost: host snapshot, atomic on-disk commit
+    (``repro.ckpt.save_state``), and arena rebuild on restore."""
+    import shutil
+    import tempfile
+
+    from repro.ckpt import save_state
+
+    rng = np.random.default_rng(7)
+    rows = []
+    for tenants in tenant_counts:
+        pool = ForestPool()
+        sizes = rng.choice([16, 64, 256], size=tenants)
+        methods = ["forest" if i % 2 == 0 else "alias"
+                   for i in range(tenants)]
+        pool.insert_many(
+            [rng.random(s) ** 6 + 1e-9 for s in sizes], method=methods
+        )
+        t_snap = _time(lambda: pool.snapshot(), reps=3)
+        state = pool.snapshot()
+        tmp = tempfile.mkdtemp(prefix="pool_snap_bench_")
+        try:
+            step = [0]
+
+            def save():
+                step[0] += 1
+                save_state(tmp, state, step[0])
+
+            t_save = _time(save, reps=3)
+            t_rest = _time(lambda: ForestPool.restore(state), reps=3)
+        finally:
+            shutil.rmtree(tmp, ignore_errors=True)
+        rows.append(
+            {
+                "tenants": tenants,
+                "classes": len(pool.classes) + len(pool.alias_classes),
+                "snapshot_us": t_snap * 1e6, "save_us": t_save * 1e6,
+                "restore_us": t_rest * 1e6,
+            }
+        )
+    return rows
+
+
 def main_construction() -> list[str]:
     rows = [
         f"pool_construction,B={r['B']},n={r['n']},"
@@ -244,11 +320,26 @@ def main_sampling() -> list[str]:
         f"Msamples_s={r['msps']:.2f}"
         for r in run_sampling_methods()
     ]
+    rows += [
+        f"pool_sampling,guard={r['guard']},tenants={r['tenants']},"
+        f"classes={r['classes']},us_per_drain={r['us']:.0f},"
+        f"Msamples_s={r['msps']:.2f}"
+        for r in run_sampling_guard()
+    ]
     return rows
 
 
+def main_snapshot() -> list[str]:
+    return [
+        f"pool_snapshot,tenants={r['tenants']},classes={r['classes']},"
+        f"snapshot_us={r['snapshot_us']:.0f},save_us={r['save_us']:.0f},"
+        f"restore_us={r['restore_us']:.0f}"
+        for r in run_snapshot()
+    ]
+
+
 def main() -> list[str]:
-    return main_construction() + main_sampling()
+    return main_construction() + main_sampling() + main_snapshot()
 
 
 if __name__ == "__main__":

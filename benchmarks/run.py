@@ -39,6 +39,7 @@ def main() -> None:
         ("Pool construction", pool.main_construction),
         ("Sampling throughput", sampling_throughput.main),
         ("Pool sampling", pool.main_sampling),
+        ("Pool snapshot", pool.main_snapshot),
         ("Serving best-of-n diversity", serving_diversity.main),
         ("Map2D construction", spatial.main_construction),
         ("Map2D sampling", spatial.main_sampling),

@@ -162,3 +162,51 @@ eng2.run(max_steps=100)
 assert all(r.done and len(r.out) == 4 for r in reqs2)
 assert all(all(0 <= t < len(r.prior) for t in r.out) for r in reqs2)
 print(f"served {len(reqs2)} mixed-method requests in {eng2.steps} steps")
+
+# --- 9. Hardened serving: validated admission, quarantine, and
+#        snapshot/restore. Malformed weight rows are rejected at the
+#        boundary with a structured taxonomy (every class a ValueError);
+#        a quarantine-policy pool admits the tenant on a uniform
+#        placeholder and flags it instead of failing the wave; and the
+#        whole serving state (arena payloads, free lists, version
+#        counters, device stream counters) round-trips through
+#        save_serving/load_serving for bit-identical resumed drains.
+import tempfile
+
+from repro.robust import (
+    NegativeWeightError, QuarantinedError, load_serving, save_serving,
+    verify_pool,
+)
+
+try:
+    pool.insert(np.asarray([2.0, -1.0, 2.0]))   # positive sum, still bad
+except NegativeWeightError as e:
+    print(f"rejected at admission with code {e.code!r}")
+
+qpool = ForestPool(policy="quarantine")
+ok = qpool.insert(rng.random(6) + 1e-3)
+sus = qpool.insert(np.asarray([1.0, np.nan, 1.0]))  # admitted, flagged
+assert qpool.is_quarantined(sus) and not qpool.is_quarantined(ok)
+try:
+    qpool.weights(sus)
+except QuarantinedError:
+    pass  # the row serves a uniform placeholder, not the bad submission
+qpool.update_weights(sus, np.arange(1.0, 4.0))      # clean update clears
+assert not qpool.is_quarantined(sus)
+print(f"quarantine: flagged on admit, cleared by a clean update "
+      f"({qpool.stats()['quarantined']} still flagged)")
+
+with tempfile.TemporaryDirectory() as ck:
+    streams2 = DeviceQmcStreams(8, seed=7)
+    before = qpool.sample_streams([ok, sus] * 4, np.arange(8), streams2)
+    save_serving(ck, step=1, pool=qpool, streams=streams2)
+    states, step = load_serving(ck)
+    rpool = ForestPool.restore(states["pool"])
+    from repro.serve.sampler import restore_streams
+    rstreams = restore_streams(states["streams"])
+    assert verify_pool(rpool) == []
+    a = qpool.sample_streams([ok, sus] * 4, np.arange(8), streams2)
+    b = rpool.sample_streams([ok, sus] * 4, np.arange(8), rstreams)
+    assert np.array_equal(a, b)
+print("snapshot/restore: resumed drains bit-identical "
+      "(verify_pool clean after restore)")

@@ -1,8 +1,17 @@
 from .checkpoint import (
     CheckpointManager,
     latest_step,
+    load_state,
     restore,
     save,
+    save_state,
 )
 
-__all__ = ["CheckpointManager", "latest_step", "restore", "save"]
+__all__ = [
+    "CheckpointManager",
+    "latest_step",
+    "load_state",
+    "restore",
+    "save",
+    "save_state",
+]

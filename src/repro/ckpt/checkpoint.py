@@ -114,8 +114,120 @@ def restore(path: str | os.PathLike, like: Any, step: int | None = None,
     return jax.tree_util.tree_unflatten(treedef, leaves), step
 
 
+# ---------------------------------------------------------------- state blobs
+#
+# ``save``/``restore`` speak jax pytrees of arrays — the trainer's language.
+# Serving state (``ForestPool.snapshot()`` and friends) is richer: nested
+# dicts with int keys, free *lists* whose order matters, sets, strings,
+# None, and numpy arrays. ``save_state``/``load_state`` give that shape the
+# same atomic-commit durability: containers are encoded as tagged JSON
+# (``__dict__`` keeps int keys and insertion order, ``__tuple__``/``__set__``
+# round-trip exactly), arrays spill to npy leaves next to the manifest.
+
+_STATE = "state.json"
+
+
+def _enc_state(x: Any, arrays: list[np.ndarray]) -> Any:
+    if x is None or isinstance(x, (bool, str)):
+        return x
+    if isinstance(x, (int, np.integer)):
+        return int(x)
+    if isinstance(x, (float, np.floating)):
+        return float(x)
+    if isinstance(x, (np.ndarray, jax.Array)):
+        arrays.append(np.asarray(x))
+        return {"__arr__": len(arrays) - 1}
+    if isinstance(x, tuple):
+        return {"__tuple__": [_enc_state(v, arrays) for v in x]}
+    if isinstance(x, list):
+        return {"__list__": [_enc_state(v, arrays) for v in x]}
+    if isinstance(x, (set, frozenset)):
+        enc = [_enc_state(v, arrays) for v in x]
+        return {"__set__": sorted(enc, key=repr)}  # deterministic bytes
+    if isinstance(x, dict):
+        return {
+            "__dict__": [
+                [_enc_state(k, arrays), _enc_state(v, arrays)]
+                for k, v in x.items()
+            ]
+        }
+    raise TypeError(f"save_state cannot encode {type(x).__name__}")
+
+
+def _dec_state(x: Any, arrays: list[np.ndarray]) -> Any:
+    if isinstance(x, dict):
+        if "__arr__" in x:
+            return arrays[x["__arr__"]]
+        if "__tuple__" in x:
+            return tuple(_dec_state(v, arrays) for v in x["__tuple__"])
+        if "__list__" in x:
+            return [_dec_state(v, arrays) for v in x["__list__"]]
+        if "__set__" in x:
+            return {_dec_state(v, arrays) for v in x["__set__"]}
+        if "__dict__" in x:
+            return {
+                _dec_state(k, arrays): _dec_state(v, arrays)
+                for k, v in x["__dict__"]
+            }
+        raise ValueError(f"unknown state tag {sorted(x)!r}")
+    return x
+
+
+def save_state(path: str | os.PathLike, state: Any, step: int) -> Path:
+    """Atomically commit a nested python state blob (same tmp/fsync/rename
+    contract as :func:`save`; interoperates with :func:`latest_step`)."""
+    root = Path(path)
+    root.mkdir(parents=True, exist_ok=True)
+    final = root / f"step_{step:08d}"
+    tmp = root / f"step_{step:08d}.tmp"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    arrays: list[np.ndarray] = []
+    enc = _enc_state(state, arrays)
+    files = []
+    for i, arr in enumerate(arrays):
+        fn = f"leaf_{i:05d}.npy"
+        np.save(tmp / fn, arr)
+        files.append({"file": fn, "dtype": str(arr.dtype)})
+    (tmp / _STATE).write_text(json.dumps(enc))
+    (tmp / _MANIFEST).write_text(
+        json.dumps({"step": step, "kind": "state", "leaves": files})
+    )
+    for f in tmp.iterdir():
+        fd = os.open(f, os.O_RDONLY)
+        os.fsync(fd)
+        os.close(fd)
+    if final.exists():
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def load_state(path: str | os.PathLike, step: int | None = None) -> tuple[Any, int]:
+    """Load a :func:`save_state` blob (latest step by default)."""
+    root = Path(path)
+    if step is None:
+        step = latest_step(root)
+        if step is None:
+            raise FileNotFoundError(f"no state snapshot under {root}")
+    d = root / f"step_{step:08d}"
+    manifest = json.loads((d / _MANIFEST).read_text())
+    if manifest.get("kind") != "state":
+        raise ValueError(f"{d} is a pytree checkpoint, not a state blob")
+    arrays = [np.load(d / m["file"]) for m in manifest["leaves"]]
+    enc = json.loads((d / _STATE).read_text())
+    return _dec_state(enc, arrays), step
+
+
 class CheckpointManager:
-    """keep-last-k, optional async, auto-resume."""
+    """keep-last-k, optional async, auto-resume.
+
+    Async worker failures are never swallowed: an exception on the write
+    thread is captured and re-raised on the next :meth:`save` or
+    :meth:`wait` call — a training loop cannot keep running for hours on
+    the belief that checkpoints exist when the disk filled up at step 100.
+    """
 
     def __init__(self, path: str | os.PathLike, keep: int = 3,
                  async_save: bool = False):
@@ -123,6 +235,7 @@ class CheckpointManager:
         self.keep = keep
         self.async_save = async_save
         self._thread: threading.Thread | None = None
+        self._exc: BaseException | None = None
 
     def _gc(self) -> None:
         steps = sorted(
@@ -132,15 +245,25 @@ class CheckpointManager:
         for p in steps[: -self.keep]:
             shutil.rmtree(p, ignore_errors=True)
 
+    def _raise_pending(self) -> None:
+        if self._exc is not None:
+            exc, self._exc = self._exc, None
+            raise RuntimeError("async checkpoint save failed") from exc
+
     def save(self, tree: Any, step: int) -> None:
         if self._thread is not None:
             self._thread.join()  # one in flight
+            self._thread = None
+        self._raise_pending()
         if self.async_save:
             host = jax.tree.map(np.asarray, tree)  # snapshot now
 
             def work():
-                save(self.root, host, step)
-                self._gc()
+                try:
+                    save(self.root, host, step)
+                    self._gc()
+                except BaseException as e:  # surfaced on next save()/wait()
+                    self._exc = e
 
             self._thread = threading.Thread(target=work, daemon=True)
             self._thread.start()
@@ -152,6 +275,7 @@ class CheckpointManager:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        self._raise_pending()
 
     def restore_latest(self, like: Any, shardings: Any = None):
         return restore(self.root, like, None, shardings)

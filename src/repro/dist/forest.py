@@ -804,6 +804,8 @@ def sample_sharded(
     axis: str = "data",
     use_fallback: bool = True,
     routed: bool = True,
+    on_mismatch: str = "raise",
+    with_stats: bool = False,
 ) -> jax.Array:
     """Algorithm 2 over the sharded forest: owner-routed bulk drain.
 
@@ -822,21 +824,44 @@ def sample_sharded(
     combine with an exact one-owner-per-lane ``psum``.
 
     Both paths are elementwise identical to ``core.sample.sample_forest`` on
-    the gathered forest. Returns global interval ids."""
+    the gathered forest. Returns global interval ids.
+
+    ``on_mismatch`` picks the behavior when the forest's shard count does
+    not match the mesh data axis (a restore onto a shrunk/grown mesh):
+    ``"raise"`` (default, the strict contract) or ``"degrade"`` — gather
+    the forest (:func:`gather_forest` is exact) and resolve the whole
+    batch with the single-device descent, elementwise-identical to the
+    sharded drain, flagged ``degraded=True`` in the stats dict that
+    ``with_stats=True`` adds to the return."""
+    if on_mismatch not in ("raise", "degrade"):
+        raise ValueError(
+            f"on_mismatch must be 'raise' or 'degrade', got {on_mismatch!r}"
+        )
     mesh = mesh if mesh is not None else default_mesh(axis)
     D = int(mesh.shape[axis])
+    stats = dict(degraded=False, n_shards=forest.n_shards, mesh_devices=D)
     if forest.n_shards != D:
-        raise ValueError(
-            f"forest has {forest.n_shards} shards but mesh axis has {D}"
+        if on_mismatch == "raise":
+            raise ValueError(
+                f"forest has {forest.n_shards} shards but mesh axis has {D}"
+            )
+        from repro.core.sample import sample_forest
+
+        out = sample_forest(
+            gather_forest(forest), jnp.asarray(xi, jnp.float32),
+            use_fallback=use_fallback,
         )
+        stats["degraded"] = True
+        return (out, stats) if with_stats else out
     if not routed:
-        return _sampler(
+        out = _sampler(
             mesh, axis, forest.m, forest.n, forest.capacity, use_fallback
         )(
             forest.table, forest.left, forest.right, forest.fallback,
             forest.cdf, forest.cell_first, forest.cell_bounds,
             forest.window_start, jnp.asarray(xi, jnp.float32),
         )
+        return (out, stats) if with_stats else out
     plan, xi_p = _drain_plan(forest, xi, D)
     out = _routed_sampler(
         mesh, axis, forest.m, forest.n, forest.capacity, use_fallback,
@@ -846,7 +871,8 @@ def sample_sharded(
         forest.cdf, forest.cell_first, forest.cell_bounds,
         forest.window_start, xi_p,
     )
-    return out[: plan["batch"]]
+    out = out[: plan["batch"]]
+    return (out, stats) if with_stats else out
 
 
 @functools.lru_cache(maxsize=128)

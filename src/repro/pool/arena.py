@@ -39,6 +39,23 @@ Zero-padding is sound on both paths: padded forest intervals have zero
 width, and padded alias cells are full-deficit lights with ``q == 0`` that
 are never an alias target — no uniform in [0, 1) ever resolves to either.
 
+**Admission policy** (the :mod:`repro.robust` boundary): every weight row
+entering the pool (``insert`` / ``insert_many`` / ``update_weights``) is
+classified against the invariants a monotone CDF needs — finite entries,
+no negatives, a positive total that survives the f64 normalize — with a
+structured taxonomy (``non_finite`` / ``negative`` / ``zero_total`` /
+``overflow_on_pad``, each a ``ValueError`` subclass in
+:mod:`repro.robust.errors`). The per-pool ``policy`` decides what a
+violation does: ``reject`` (default) raises before anything touches an
+arena row; ``clamp`` repairs (NaN->0, +Inf->f32max, negatives->0, then a
+uniform placeholder if the total is zero) and admits the repaired row;
+``quarantine`` admits a uniform placeholder and flags the handle
+(``is_quarantined`` / ``stats()['quarantined']``; ``weights()`` refuses;
+a later clean ``update_weights`` clears the flag) — co-tenants in the
+same packed batch are untouched in every case. ``off`` skips validation
+(benchmark witness only). Stale handles raise
+:class:`~repro.robust.errors.StaleHandleError`.
+
 Draining groups draws by ``(method, size class)`` and issues ONE batched
 kernel launch per touched group — ``forest_sample_batched`` /
 ``alias_sample_batched``, or their stream-aware forms under
@@ -59,15 +76,12 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.cdf import (
-    build_cdf,
-    lower_bounds,
-    normalize_weights,
-    updated_weights,
-)
+from repro.core.cdf import build_cdf, lower_bounds, normalize_weights
 from repro.core.alias import AliasTable
 from repro.core.forest import RadixForest, forest_from_cdf
 from repro.kernels import ops
+from repro.robust.errors import QuarantinedError, StaleHandleError
+from repro.robust.validate import check_policy, sanitize_weights
 
 from .batched import BatchedAlias, BatchedForest, build_forest_batched
 
@@ -206,18 +220,24 @@ class ForestPool:
     ``m = size``, the repo-wide guide density); ``init_rows`` is the
     starting arena height, doubled on demand. Forest and alias arenas are
     disjoint per size (``classes`` / ``alias_classes``); a handle's
-    ``method`` routes every pool call to the right one.
+    ``method`` routes every pool call to the right one. ``policy`` sets the
+    weight-admission behavior (``reject`` | ``clamp`` | ``quarantine`` |
+    ``off`` — see the module docstring for the taxonomy).
     """
 
     def __init__(self, min_class: int = 8, m: int | None = None,
-                 init_rows: int = 4):
+                 init_rows: int = 4, policy: str = "reject"):
         if min_class < 1 or (min_class & (min_class - 1)):
             raise ValueError("min_class must be a positive power of two")
         self.min_class = min_class
         self._m = m
         self.init_rows = max(int(init_rows), 1)
+        self.policy = check_policy(policy)
         self.classes: dict[int, _SizeClass] = {}
         self.alias_classes: dict[int, AliasArena] = {}
+        # (method, size_class, row, version) of handles admitted under the
+        # quarantine policy: serving a uniform placeholder, flag queryable.
+        self.quarantined: set[tuple[str, int, int, int]] = set()
 
     # ------------------------------------------------------------- plumbing
 
@@ -251,8 +271,18 @@ class ForestPool:
             or h.row not in sc.raw
             or sc.versions[h.row] != h.version
         ):
-            raise ValueError(f"stale or evicted handle: {h}")
+            raise StaleHandleError(f"stale or evicted handle: {h}")
         return sc
+
+    @staticmethod
+    def _qkey(h: Handle) -> tuple[str, int, int, int]:
+        return (h.method, h.size_class, h.row, h.version)
+
+    def is_quarantined(self, handle: Handle) -> bool:
+        """True if the (live) handle was admitted under ``quarantine`` and
+        has not since been cleared by a clean ``update_weights``."""
+        self._check(handle)
+        return self._qkey(handle) in self.quarantined
 
     def _pad(self, w: np.ndarray, size: int) -> np.ndarray:
         return np.pad(w.astype(np.float32), (0, size - len(w)))
@@ -289,8 +319,16 @@ class ForestPool:
         method for the whole wave or a per-tenant sequence
         (``"forest"``/``"alias"``). The group is padded to a power-of-two
         batch so heterogeneous admission waves reuse a logarithmic number
-        of compiled build programs."""
-        raws = [np.asarray(w, np.float64) for w in weights_list]
+        of compiled build programs.
+
+        Every row passes the pool's admission policy first: under
+        ``reject`` a bad row raises (taxonomy class per violation) before
+        any arena row is taken; under ``clamp``/``quarantine`` the
+        repaired/placeholder row is what gets built, so a poisoned
+        submission can never corrupt the packed batch it shares with
+        co-tenants."""
+        sanitized = [sanitize_weights(w, self.policy) for w in weights_list]
+        raws = [r for r, _ in sanitized]
         if isinstance(method, str):
             methods = [method] * len(raws)
         else:
@@ -325,6 +363,8 @@ class ForestPool:
                     handles[i] = Handle(
                         size, row, len(norms[i]), int(ar.versions[row]), "alias"
                     )
+                    if sanitized[i][1]:
+                        self.quarantined.add(self._qkey(handles[i]))
                 continue
             built = build_forest_batched(jnp.asarray(stack), ar.m)
             built = BatchedForest(*(x[: len(idxs)] for x in built))
@@ -339,6 +379,8 @@ class ForestPool:
                     ar.degenerate_rows.add(row)
                 handles[i] = Handle(size, row, len(norms[i]),
                                     int(ar.versions[row]))
+                if sanitized[i][1]:
+                    self.quarantined.add(self._qkey(handles[i]))
         return handles  # type: ignore[return-value]
 
     def update_weights(self, handle: Handle, weights=None, *, delta=None) -> None:
@@ -348,8 +390,17 @@ class ForestPool:
         skip the rebuild; otherwise the returned separator distances feed a
         single-row rebuild. Alias rows re-run the split-and-pack on the one
         padded row, with the skip keyed on the padded float32 weight bits.
-        The handle stays valid (versions track slot reuse, not content)."""
+        The handle stays valid (versions track slot reuse, not content).
+
+        The resulting raw row passes the pool's admission policy: a retune
+        that goes bad (all-zero total, a delta driving entries negative,
+        NaN poisoning) raises the taxonomy class under ``reject``, is
+        repaired under ``clamp``, or swaps the row to the uniform
+        placeholder and flags the handle under ``quarantine`` — and a
+        clean update clears a standing quarantine flag."""
         sc = self._check(handle)
+        if (weights is None) == (delta is None):
+            raise ValueError("pass exactly one of weights or delta")
         for name, arr in (("weights", weights), ("delta", delta)):
             if arr is not None and np.asarray(arr).shape != (handle.n,):
                 raise ValueError(
@@ -358,7 +409,17 @@ class ForestPool:
                     f"padded-size arrays would silently broadcast)"
                 )
         old_raw = sc.raw[handle.row]
-        raw, w = updated_weights(old_raw, weights, delta=delta)
+        if weights is None:
+            proposed = np.asarray(old_raw, np.float64) + np.asarray(delta, np.float64)
+        else:
+            proposed = np.asarray(weights, np.float64)
+        # reject raises here, BEFORE the shadow copy or any arena row moves
+        raw, quarantine = sanitize_weights(proposed, self.policy)
+        w = normalize_weights(raw)
+        if quarantine:
+            self.quarantined.add(self._qkey(handle))
+        else:
+            self.quarantined.discard(self._qkey(handle))
         sc.raw[handle.row] = raw
         if handle.method == "alias":
             new_row = self._pad(w, sc.size)
@@ -407,6 +468,7 @@ class ForestPool:
         alias rows zero their packed table (a cleared row is inert even if
         a bug ever routed a lane into it)."""
         sc = self._check(handle)
+        self.quarantined.discard(self._qkey(handle))
         sc.versions[handle.row] += 1
         sc.n_true[handle.row] = 0
         sc.raw.pop(handle.row, None)
@@ -423,6 +485,92 @@ class ForestPool:
             sc.forest = sc.forest._replace(
                 fallback=sc.forest.fallback.at[handle.row].set(False)
             )
+
+    # ---------------------------------------------------------- persistence
+
+    def snapshot(self) -> dict:
+        """Full serving-state snapshot: every arena payload, free list,
+        version counter, raw-weight shadow, and quarantine flag — the
+        nested-dict form :func:`repro.ckpt.save_state` commits atomically.
+        A pool restored from it (:meth:`restore`) validates every
+        outstanding :class:`Handle` and produces bit-identical drains."""
+
+        def common(ar: _Arena) -> dict:
+            return dict(
+                size=ar.size, rows=ar.rows,
+                n_true=ar.n_true.copy(), versions=ar.versions.copy(),
+                free=list(ar.free),
+                raw={int(r): np.asarray(v) for r, v in ar.raw.items()},
+                builds=ar.builds, grows=ar.grows,
+            )
+
+        classes = {}
+        for size, sc in self.classes.items():
+            d = common(sc)
+            d.update(
+                m=sc.m,
+                degenerate_rows=set(sc.degenerate_rows),
+                delta_rebuilds=sc.delta_rebuilds,
+                delta_skips=sc.delta_skips,
+                forest=None if sc.forest is None
+                else [np.asarray(x) for x in sc.forest],
+            )
+            classes[int(size)] = d
+        alias_classes = {}
+        for size, ar in self.alias_classes.items():
+            d = common(ar)
+            d.update(
+                rebuilds=ar.rebuilds, skips=ar.skips,
+                table=None if ar.table is None
+                else [np.asarray(x) for x in ar.table],
+            )
+            alias_classes[int(size)] = d
+        return dict(
+            kind="forest_pool",
+            policy=self.policy, min_class=self.min_class, m=self._m,
+            init_rows=self.init_rows,
+            quarantined=set(self.quarantined),
+            classes=classes, alias_classes=alias_classes,
+        )
+
+    @classmethod
+    def restore(cls, state: dict) -> "ForestPool":
+        """Rebuild a pool from :meth:`snapshot` output (live or round-
+        tripped through :func:`repro.ckpt.load_state`). Handles issued by
+        the snapshotted pool stay valid — versions are part of the state —
+        and subsequent drains are bit-identical."""
+        if state.get("kind") != "forest_pool":
+            raise ValueError(f"not a ForestPool snapshot: {state.get('kind')!r}")
+        pool = cls(min_class=state["min_class"], m=state["m"],
+                   init_rows=state["init_rows"], policy=state["policy"])
+        pool.quarantined = {tuple(k) for k in state["quarantined"]}
+
+        def load_common(ar: _Arena, d: dict) -> None:
+            ar.rows = int(d["rows"])
+            ar.n_true = np.asarray(d["n_true"], np.int64).copy()
+            ar.versions = np.asarray(d["versions"], np.int64).copy()
+            ar.free = [int(r) for r in d["free"]]
+            ar.raw = {int(r): np.asarray(v, np.float64)
+                      for r, v in d["raw"].items()}
+            ar.builds, ar.grows = int(d["builds"]), int(d["grows"])
+
+        for size, d in state["classes"].items():
+            sc = _SizeClass(int(d["size"]), int(d["m"]), 1)
+            load_common(sc, d)
+            sc.degenerate_rows = {int(r) for r in d["degenerate_rows"]}
+            sc.delta_rebuilds = int(d["delta_rebuilds"])
+            sc.delta_skips = int(d["delta_skips"])
+            sc.forest = (None if d["forest"] is None else
+                         BatchedForest(*(jnp.asarray(x) for x in d["forest"])))
+            pool.classes[int(size)] = sc
+        for size, d in state["alias_classes"].items():
+            ar = AliasArena(int(d["size"]), 1)
+            load_common(ar, d)
+            ar.rebuilds, ar.skips = int(d["rebuilds"]), int(d["skips"])
+            ar.table = (None if d["table"] is None else
+                        BatchedAlias(*(jnp.asarray(x) for x in d["table"])))
+            pool.alias_classes[int(size)] = ar
+        return pool
 
     # ------------------------------------------------------------- sampling
 
@@ -446,12 +594,45 @@ class ForestPool:
         didp[: len(qs)] = [handles[q].row for q in qs]
         return didp, qpad
 
+    def _guard_group(self, meth: str, size: int, rows) -> None:
+        """Drain-time invariant screen (``guard=True``): before launching a
+        group's kernel, vectorized-check the rows it will touch — forest
+        rows must hold a finite monotone [0, 1] CDF, alias rows a valid
+        split/target table. Catches payload corruption that slipped past
+        admission (e.g. a bug writing through a freed row) at the cost the
+        ``pool_sampling,guard=on`` bench row witnesses."""
+        ridx = np.unique(np.asarray(rows, np.int64))
+        ridx = ridx[ridx >= 0]
+        if ridx.size == 0:
+            return
+        if meth == "alias":
+            ar = self.alias_classes[size]
+            q = np.asarray(ar.table.q)[ridx]
+            a = np.asarray(ar.table.alias)[ridx]
+            ok = (np.isfinite(q).all() and (q >= 0.0).all()
+                  and (q <= 1.0).all() and (a >= 0).all()
+                  and (a < ar.size).all())
+            if not ok:
+                raise ValueError(
+                    f"guard: corrupted alias row(s) in size class {size}"
+                )
+        else:
+            sc = self.classes[size]
+            cdf = np.asarray(sc.forest.cdf)[ridx]
+            ok = (np.isfinite(cdf).all()
+                  and (np.diff(cdf, axis=1) >= 0.0).all()
+                  and (cdf[:, 0] == 0.0).all() and (cdf[:, -1] == 1.0).all())
+            if not ok:
+                raise ValueError(
+                    f"guard: corrupted forest row(s) in size class {size}"
+                )
+
     def _clip_out(self, out, handles, qs, idx) -> None:
         hi = np.asarray([handles[q].n - 1 for q in qs], np.int64)
         out[qs] = np.minimum(np.asarray(idx)[: len(qs)], hi).astype(np.int32)
 
     def sample(self, handles, xi, use_pallas: bool = True,
-               coalesce: bool = True) -> np.ndarray:
+               coalesce: bool = True, guard: bool = False) -> np.ndarray:
         """Bulk mixed-batch drain from host uniforms: draw q resolves
         ``xi[q]`` in ``handles[q]``'s distribution. One batched kernel
         launch per touched (method, size class) group — forest groups
@@ -468,6 +649,8 @@ class ForestPool:
         out = np.empty(len(xi), np.int32)
         for (meth, size), qs in self._drain_plan(handles).items():
             didp, qpad = self._class_lanes(handles, qs)
+            if guard:
+                self._guard_group(meth, size, didp)
             up = np.pad(xi[qs], (0, qpad - len(qs)))
             if meth == "alias":
                 ar = self.alias_classes[size]
@@ -488,7 +671,8 @@ class ForestPool:
 
     def sample_streams(self, handles, slots, streams,
                        use_pallas: bool = True, coalesce: bool = True,
-                       return_xi: bool = False) -> np.ndarray:
+                       return_xi: bool = False,
+                       guard: bool = False) -> np.ndarray:
         """The stream-aware bulk drain: draw q resolves ``slots[q]``'s next
         QMC stream point in ``handles[q]``'s distribution, with the whole
         stream side on device. ``streams`` follows the ``DeviceQmcStreams``
@@ -511,6 +695,8 @@ class ForestPool:
         out = np.empty(len(slots), np.int32)
         for (meth, size), qs in self._drain_plan(handles).items():
             didp, qpad = self._class_lanes(handles, qs)
+            if guard:
+                self._guard_group(meth, size, didp)
             sel = jnp.asarray(qs, jnp.int32)
             pad = qpad - len(qs)
             if meth == "alias":
@@ -558,8 +744,15 @@ class ForestPool:
         return ar.table.row(handle.row)
 
     def weights(self, handle: Handle) -> np.ndarray:
-        """Normalized float32 weights currently served for the tenant."""
+        """Normalized float32 weights currently served for the tenant.
+        Quarantined handles refuse (:class:`QuarantinedError`) — the row
+        serves a uniform placeholder, not the tenant's submission, and
+        reading it back as if it were theirs would hide the quarantine."""
         sc = self._check(handle)
+        if self._qkey(handle) in self.quarantined:
+            raise QuarantinedError(
+                f"handle is quarantined (serving uniform placeholder): {handle}"
+            )
         return normalize_weights(sc.raw[handle.row])
 
     def stats(self) -> dict:
@@ -588,6 +781,8 @@ class ForestPool:
             alias_classes=aper,
             tenants=sum(sc.occupied for sc in self.classes.values())
             + sum(ar.occupied for ar in self.alias_classes.values()),
+            policy=self.policy,
+            quarantined=len(self.quarantined),
         )
 
 

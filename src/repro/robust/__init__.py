@@ -1,0 +1,65 @@
+"""Serving robustness layer: validated admission, snapshot/restore, and
+fault-injection conformance.
+
+Three pieces, threaded through the pool/serve/dist stack:
+
+1. **Validated admission** (:mod:`.errors`, :mod:`.validate`) — a
+   structured weight-violation taxonomy (``non_finite`` / ``negative`` /
+   ``zero_total`` / ``overflow_on_pad``, every class a ``ValueError``)
+   and the per-pool policy ``reject | clamp | quarantine`` enforced at
+   the :class:`~repro.pool.ForestPool` /
+   :class:`~repro.spatial.Map2DSampler` /
+   :class:`~repro.serve.ServeEngine` boundary.
+2. **Snapshot/restore** (:mod:`.snapshot`) — every serving component
+   exposes an exact ``snapshot()``/``restore()`` state pair;
+   :func:`save_serving`/:func:`load_serving` commit bundles atomically
+   through :mod:`repro.ckpt`, and a killed process resumes with
+   bit-identical drains and stream counters.
+3. **Invariant checks + chaos harness** (:mod:`.verify`, :mod:`.faults`)
+   — ``verify_forest``/``verify_alias``/``verify_pool`` structural
+   self-checks, and a :class:`~repro.robust.faults.FaultPlan` harness
+   that injects corrupted submissions, stale handles, kills, and mesh
+   shrinks, asserting co-tenant bit-isolation throughout.
+
+``faults`` is imported lazily (``from repro.robust.faults import ...``)
+because it reaches back into :mod:`repro.pool`, which itself imports
+this package's taxonomy.
+"""
+from .errors import (
+    AdmissionError,
+    NegativeWeightError,
+    NonFiniteWeightError,
+    OverflowOnPadError,
+    QuarantinedError,
+    RequestError,
+    ServingError,
+    StaleHandleError,
+    WeightDtypeError,
+    WeightShapeError,
+    ZeroTotalError,
+)
+from .snapshot import load_serving, save_serving
+from .validate import POLICIES, classify_weights, sanitize_weights
+from .verify import verify_alias, verify_forest, verify_pool
+
+__all__ = [
+    "AdmissionError",
+    "NegativeWeightError",
+    "NonFiniteWeightError",
+    "OverflowOnPadError",
+    "QuarantinedError",
+    "RequestError",
+    "ServingError",
+    "StaleHandleError",
+    "WeightDtypeError",
+    "WeightShapeError",
+    "ZeroTotalError",
+    "POLICIES",
+    "classify_weights",
+    "sanitize_weights",
+    "verify_alias",
+    "verify_forest",
+    "verify_pool",
+    "load_serving",
+    "save_serving",
+]

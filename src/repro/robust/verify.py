@@ -1,0 +1,175 @@
+"""Structural self-checks for forests, alias tables, and pool arenas.
+
+These are the on-demand / post-restore invariant checkers of the
+robustness layer: lighter than :func:`repro.core.forest.validate_forest`
+(which walks every tree node recursively in Python) — vectorized numpy
+checks of exactly the invariants sampling correctness rests on:
+
+- ``verify_forest``: the CDF is a finite monotone partition of [0, 1]
+  with exact endpoints; guide cells cover the interval list disjointly
+  (``cell_first`` nondecreasing, in range); child refs are in range.
+- ``verify_alias``: split points ``q`` in [0, 1]; alias targets in range;
+  and **mass conservation** — the implied per-cell probability
+  ``(q_i + sum_{j: alias_j == i} (1 - q_j)) / n`` matches the normalized
+  weights within an ulp-scale tolerance.
+- ``verify_pool``: free-list / version / shadow-copy consistency of every
+  arena (no leaked or double-freed rows), then the per-row forest / alias
+  checks against each tenant's raw-weight shadow.
+
+Each returns a list of violation strings (empty = healthy); pass
+``raise_on_error=True`` to turn violations into a ``ValueError``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.cdf import build_cdf, normalize_weights
+
+__all__ = ["verify_forest", "verify_alias", "verify_pool"]
+
+
+def _fail(errors: list[str], raise_on_error: bool):
+    if errors and raise_on_error:
+        raise ValueError("; ".join(errors))
+    return errors
+
+
+def verify_forest(forest, weights=None, *, raise_on_error: bool = False):
+    """Check one (padded) forest's structural invariants.
+
+    ``forest`` is a :class:`~repro.core.forest.RadixForest` (or any object
+    with ``cdf``/``left``/``right``/``cell_first`` fields). With
+    ``weights`` (the padded, normalized float32 row the forest was built
+    from) the CDF is additionally checked bit-level against a recomputed
+    ``build_cdf`` — the strongest witness that no corruption reached the
+    arena row.
+    """
+    errors: list[str] = []
+    cdf = np.asarray(forest.cdf, np.float32)
+    n = cdf.shape[0] - 1
+    if not np.isfinite(cdf).all():
+        errors.append("cdf has non-finite entries")
+    else:
+        if cdf[0] != 0.0:
+            errors.append(f"cdf[0] = {cdf[0]!r}, want exactly 0.0")
+        if cdf[-1] != 1.0:
+            errors.append(f"cdf[-1] = {cdf[-1]!r}, want exactly 1.0")
+        if (np.diff(cdf) < 0).any():
+            errors.append("cdf not monotone nondecreasing")
+    cf = np.asarray(forest.cell_first, np.int64)
+    if (np.diff(cf) < 0).any():
+        errors.append("cell_first not nondecreasing (cells overlap)")
+    if cf.size and (cf[0] < 0 or cf[-1] > n):
+        errors.append(f"cell_first out of range [0, {n}]")
+    for name in ("left", "right"):
+        ch = np.asarray(getattr(forest, name), np.int64)
+        # >= 0: internal node id; < 0: ~interval leaf ref.
+        leaf = np.where(ch < 0, ~ch, 0)
+        node = np.where(ch >= 0, ch, 0)
+        if (leaf >= n).any() or (node >= n).any():
+            errors.append(f"{name} child refs out of range for n={n}")
+    if weights is not None and not errors:
+        want = np.asarray(build_cdf(np.asarray(weights, np.float32)))
+        if want.shape != cdf.shape or not np.array_equal(
+            want.view(np.uint32), cdf.view(np.uint32)
+        ):
+            errors.append("cdf bits do not match build_cdf(weights)")
+    return _fail(errors, raise_on_error)
+
+
+def verify_alias(table, weights=None, *, raise_on_error: bool = False):
+    """Check one (padded) packed alias table; with ``weights`` (the padded
+    normalized row) also check mass conservation within ulp bounds."""
+    errors: list[str] = []
+    q = np.asarray(table.q, np.float64)
+    alias = np.asarray(table.alias, np.int64)
+    n = q.shape[0]
+    if not np.isfinite(q).all() or (q < 0.0).any() or (q > 1.0).any():
+        errors.append("alias split points q outside [0, 1]")
+    if (alias < 0).any() or (alias >= n).any():
+        errors.append(f"alias targets out of range [0, {n})")
+    if weights is not None and not errors:
+        w = np.asarray(weights, np.float64)
+        # implied mass: own kept fraction + every donation received
+        p = q + np.bincount(alias, weights=1.0 - q, minlength=n)
+        p /= n
+        tol = 16.0 * np.finfo(np.float32).eps * max(n, 1)
+        if np.abs(p - w / max(w.sum(), 1e-300)).max() > tol:
+            errors.append(
+                f"alias table does not conserve mass (max err "
+                f"{np.abs(p - w / max(w.sum(), 1e-300)).max():.3e} > {tol:.3e})"
+            )
+    return _fail(errors, raise_on_error)
+
+
+def _verify_arena(kind: str, size: int, ar, errors: list[str]) -> None:
+    free = list(ar.free)
+    if len(set(free)) != len(free):
+        errors.append(f"{kind}[{size}]: duplicate rows in free list")
+    occupied = set(ar.raw.keys())
+    allr = set(range(ar.rows))
+    if not set(free).issubset(allr) or not occupied.issubset(allr):
+        errors.append(f"{kind}[{size}]: row index out of range")
+    if set(free) & occupied:
+        errors.append(f"{kind}[{size}]: free rows also occupied")
+    if (set(free) | occupied) != allr:
+        errors.append(f"{kind}[{size}]: leaked rows (neither free nor occupied)")
+    for row in occupied:
+        nt = int(ar.n_true[row])
+        if not (0 < nt <= ar.size):
+            errors.append(f"{kind}[{size}] row {row}: bad n_true {nt}")
+        if len(ar.raw[row]) != nt:
+            errors.append(f"{kind}[{size}] row {row}: raw shadow length mismatch")
+    if (np.asarray(ar.versions) < 0).any():
+        errors.append(f"{kind}[{size}]: negative version counter")
+
+
+def verify_pool(pool, *, deep: bool = True, raise_on_error: bool = False):
+    """Check every arena of a :class:`~repro.pool.arena.ForestPool`.
+
+    Always checks the slot machine (free list / version / shadow-copy
+    consistency); with ``deep`` also re-derives each occupied row's padded
+    normalized weights from the raw shadow and runs the per-row forest /
+    alias structural checks against them.
+    """
+    errors: list[str] = []
+    for size, sc in sorted(pool.classes.items()):
+        _verify_arena("forest", size, sc, errors)
+        if not deep or sc.forest is None:
+            continue
+        cdf = np.asarray(sc.forest.cdf)
+        cf = np.asarray(sc.forest.cell_first)
+        left = np.asarray(sc.forest.left)
+        right = np.asarray(sc.forest.right)
+        for row in sorted(sc.raw):
+            view = _RowView(cdf[row], left[row], right[row], cf[row])
+            padded = np.pad(
+                normalize_weights(sc.raw[row]), (0, size - len(sc.raw[row]))
+            )
+            for e in verify_forest(view, padded):
+                errors.append(f"forest[{size}] row {row}: {e}")
+    for size, ar in sorted(pool.alias_classes.items()):
+        _verify_arena("alias", size, ar, errors)
+        if not deep or ar.table is None:
+            continue
+        q = np.asarray(ar.table.q)
+        alias = np.asarray(ar.table.alias)
+        for row in sorted(ar.raw):
+            view = _AliasView(q[row], alias[row])
+            padded = np.pad(
+                normalize_weights(ar.raw[row]), (0, size - len(ar.raw[row]))
+            )
+            for e in verify_alias(view, padded):
+                errors.append(f"alias[{size}] row {row}: {e}")
+    return _fail(errors, raise_on_error)
+
+
+class _RowView:
+    def __init__(self, cdf, left, right, cell_first):
+        self.cdf, self.left, self.right = cdf, left, right
+        self.cell_first = cell_first
+
+
+class _AliasView:
+    def __init__(self, q, alias):
+        self.q, self.alias = q, alias

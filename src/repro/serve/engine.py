@@ -36,6 +36,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.config import ModelConfig
+from repro.robust.errors import RequestError, ServingError
+from repro.robust.validate import classify_weights
 
 from .sampler import PooledForestSampler, SpatialSampler, TokenSampler
 
@@ -56,17 +58,33 @@ class Request:
     prior2d: Any | None = None
     out: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # set when the engine retires the request on a fault instead of
+    # serving it (``on_fault="retire"``): "<code>: <detail>"
+    error: str | None = None
 
 
 class ServeEngine:
+    """``on_fault`` picks the per-request failure semantics: ``"raise"``
+    (default, the historical behavior — a malformed request surfaces as the
+    structured exception from :meth:`submit`/:meth:`step`) or ``"retire"``
+    — :meth:`step` isolates the failure to the offending request, retiring
+    it with ``Request.error = "<code>: <detail>"`` while every other live
+    slot keeps serving. Either way, malformed priors are caught with the
+    :mod:`repro.robust.errors` taxonomy at :meth:`submit` time when the
+    admission policy is strict, never as a mid-``step`` crash."""
+
     def __init__(self, params: Any, cfg: ModelConfig | None, n_slots: int = 8,
                  max_seq: int = 512, sampler: TokenSampler | None = None,
                  prior_sampler: PooledForestSampler | None = None,
-                 spatial_sampler: SpatialSampler | None = None):
+                 spatial_sampler: SpatialSampler | None = None,
+                 on_fault: str = "raise"):
+        if on_fault not in ("raise", "retire"):
+            raise ValueError(f"on_fault must be 'raise' or 'retire', got {on_fault!r}")
         self.params = params
         self.cfg = cfg
         self.n_slots = n_slots
         self.max_seq = max_seq
+        self.on_fault = on_fault
         self.sampler = sampler or TokenSampler(n_slots=n_slots, use_pallas=False)
         self.prior_sampler = prior_sampler
         self.prior_handles: dict[int, Any] = {}  # slot -> pool Handle
@@ -84,14 +102,60 @@ class ServeEngine:
         self.last_tok = np.zeros(n_slots, np.int32)
         self.steps = 0
 
+    def _prior_policy(self) -> str:
+        return self.prior_sampler.pool.policy if self.prior_sampler else "reject"
+
+    def _validate(self, req: Request) -> None:
+        """Submit-time structural validation: wrong dtype / negative
+        entries / non-finite mass / shape mismatches are rejected HERE,
+        with the structured taxonomy, not discovered as a mid-``step``
+        exception. Weight-*value* violations defer to the prior pool's
+        admission policy when it is lenient (clamp/quarantine repair at
+        admit instead)."""
+        if req.prior is not None:
+            try:
+                _, code = classify_weights(req.prior)
+            except ServingError as e:
+                raise RequestError(
+                    f"request {req.rid}: prior {e.code}: {e}"
+                ) from None
+            if code is not None and self._prior_policy() == "reject":
+                raise RequestError(f"request {req.rid}: prior {code}")
+        if req.prior2d is not None:
+            try:
+                rows = [np.asarray(r, np.float64) for r in req.prior2d]
+            except (TypeError, ValueError) as e:
+                raise RequestError(
+                    f"request {req.rid}: prior2d bad_dtype: {e}"
+                ) from None
+            if not rows or any(r.ndim != 1 or r.size == 0 for r in rows):
+                raise RequestError(
+                    f"request {req.rid}: prior2d bad_shape: want non-empty "
+                    "1-D rows"
+                )
+            for r in rows:
+                _, code = classify_weights(r, allow_zero_total=True)
+                if code is not None:
+                    raise RequestError(f"request {req.rid}: prior2d {code}")
+            if self.spatial_sampler is not None:
+                have = self.spatial_sampler.map.rows_raw
+                if len(rows) != len(have) or any(
+                    a.shape != b.shape for a, b in zip(rows, have)
+                ):
+                    raise RequestError(
+                        f"request {req.rid}: prior2d map_mismatch: shape "
+                        "differs from the engine's shared map"
+                    )
+
     def submit(self, req: Request) -> None:
         if req.prior is not None and req.prior2d is not None:
-            raise ValueError("a request carries prior OR prior2d, not both")
+            raise RequestError("a request carries prior OR prior2d, not both")
         if req.prior is None and req.prior2d is None and self.params is None:
-            raise ValueError(
+            raise RequestError(
                 "engine has no model (params=None); submit prior-backed "
                 "requests only"
             )
+        self._validate(req)
         self.queue.append(req)
 
     def _same_map(self, img) -> bool:
@@ -101,6 +165,18 @@ class ServeEngine:
             a.shape == b.shape and np.array_equal(a, b)
             for a, b in zip(rows, have)
         )
+
+    def _fail_request(self, s: int, err: Exception) -> None:
+        """Isolate one request's fault (``on_fault="retire"``): the request
+        retires with a structured ``error`` result; the slot frees; every
+        other live slot is untouched."""
+        req = self.slots[s]
+        if req is not None:
+            req.error = f"{getattr(err, 'code', 'error')}: {err}"
+            req.done = True
+        self.slots[s] = None
+        self.prior_handles.pop(s, None)
+        self.spatial_slots.discard(s)
 
     def _admit_spatial(self, admitted: list[tuple[int, Request]]) -> None:
         """2-D admission wave: the engine's map is a shared static asset —
@@ -113,15 +189,24 @@ class ServeEngine:
                 admitted[0][1].prior2d, n_slots=self.n_slots,
                 use_pallas=False,
             )
+        kept = []
         for s, req in admitted:
             if not self._same_map(req.prior2d):
-                self.slots[s] = None
-                raise ValueError(
+                err = RequestError(
                     f"request {req.rid}: prior2d differs from the engine's "
                     "shared map; per-request distributions go through "
                     "Request.prior (the pool path)"
                 )
+                if self.on_fault == "retire":
+                    self._fail_request(s, err)
+                    continue
+                self.slots[s] = None
+                raise err
             self.spatial_slots.add(s)
+            kept.append((s, req))
+        admitted = kept
+        if not admitted:
+            return
         slots = np.asarray([s for s, _ in admitted])
         toks = self.spatial_sampler.sample_flat(slots)
         for (s, req), tok in zip(admitted, toks):
@@ -138,11 +223,30 @@ class ServeEngine:
             self.prior_sampler = PooledForestSampler(
                 n_slots=self.n_slots, use_pallas=False
             )
+        try:
+            hs = self.prior_sampler.add_many(
+                [r.prior for _, r in admitted],
+                method=[r.method for _, r in admitted],
+            )
+        except ValueError:
+            if self.on_fault != "retire":
+                for s, _ in admitted:
+                    self.slots[s] = None
+                raise
+            # isolate: re-admit one by one, retiring only the bad tenants
+            # (their co-tenants still get the same pool rows and samples)
+            kept, hs = [], []
+            for s, req in admitted:
+                try:
+                    hs.append(self.prior_sampler.add(req.prior,
+                                                     method=req.method))
+                    kept.append((s, req))
+                except ValueError as e:
+                    self._fail_request(s, e)
+            admitted = kept
+            if not admitted:
+                return
         slots = np.asarray([s for s, _ in admitted])
-        hs = self.prior_sampler.add_many(
-            [r.prior for _, r in admitted],
-            method=[r.method for _, r in admitted],
-        )
         for (s, _), h in zip(admitted, hs):
             self.prior_handles[s] = h
         toks = self.prior_sampler.sample(hs, slots)
@@ -205,7 +309,13 @@ class ServeEngine:
                 self.slots[s] = None
                 h = self.prior_handles.pop(s, None)
                 if h is not None:
-                    self.prior_sampler.remove(h)
+                    try:
+                        self.prior_sampler.remove(h)
+                    except ValueError:
+                        # already evicted through an outside reference —
+                        # the slot still frees either way
+                        if self.on_fault != "retire":
+                            raise
                 # 2-D slots hold no pool handle — the map is shared; just
                 # leave the drain set (slot streams keep their counters)
                 self.spatial_slots.discard(s)
@@ -241,6 +351,18 @@ class ServeEngine:
                 self.slots[s].out.append(tok)
                 self.last_tok[s] = tok
                 self.pos[s] += 1
+        if prior_slots and self.on_fault == "retire":
+            # pre-drain screen: a slot whose pool handle went stale (e.g.
+            # evicted through an outside pool reference) retires with a
+            # structured error instead of poisoning the batched drain
+            live = []
+            for s in prior_slots:
+                try:
+                    self.prior_sampler.pool._check(self.prior_handles[s])
+                    live.append(s)
+                except ValueError as e:
+                    self._fail_request(s, e)
+            prior_slots = live
         if prior_slots:
             # the batched drain: every prior-backed slot, one stream-aware
             # pool call (device-side QMC counters, one launch per size class)
@@ -270,3 +392,107 @@ class ServeEngine:
     def run(self, max_steps: int = 1000) -> None:
         while (self.queue or any(self.slots)) and self.steps < max_steps:
             self.step()
+
+    # ---------------------------------------------------------- persistence
+
+    @staticmethod
+    def _req_state(r: Request | None):
+        if r is None:
+            return None
+        return dict(
+            rid=r.rid, prompt=np.asarray(r.prompt), max_new=r.max_new,
+            eos=r.eos,
+            prior=None if r.prior is None else np.asarray(r.prior, np.float64),
+            method=r.method,
+            prior2d=None if r.prior2d is None
+            else [np.asarray(row, np.float64) for row in r.prior2d],
+            out=list(r.out), done=r.done, error=r.error,
+        )
+
+    @staticmethod
+    def _req_restore(d) -> Request | None:
+        if d is None:
+            return None
+        return Request(
+            rid=int(d["rid"]), prompt=np.asarray(d["prompt"]),
+            max_new=int(d["max_new"]), eos=d["eos"],
+            prior=None if d["prior"] is None else np.asarray(d["prior"]),
+            method=d["method"],
+            prior2d=None if d["prior2d"] is None
+            else [np.asarray(row) for row in d["prior2d"]],
+            out=[int(t) for t in d["out"]], done=bool(d["done"]),
+            error=d["error"],
+        )
+
+    def snapshot(self) -> dict:
+        """Full engine serving state: slot/queue requests, per-slot
+        positions, pool handles, every sampler's exact stream state, and
+        the KV cache leaves — everything except the model parameters
+        themselves (pass those back to :meth:`restore`). Committed through
+        :func:`repro.ckpt.save_state`, a killed process resumes with
+        bit-identical subsequent drains."""
+        cache_leaves = None
+        if self.cache is not None:
+            cache_leaves = [np.asarray(x)
+                            for x in jax.tree_util.tree_leaves(self.cache)]
+        return dict(
+            kind="serve_engine",
+            n_slots=self.n_slots, max_seq=self.max_seq,
+            on_fault=self.on_fault,
+            has_model=self.params is not None,
+            steps=self.steps,
+            pos=self.pos.copy(), last_tok=self.last_tok.copy(),
+            queue=[self._req_state(r) for r in self.queue],
+            slots=[self._req_state(r) for r in self.slots],
+            prior_handles={int(s): tuple(h)
+                           for s, h in self.prior_handles.items()},
+            spatial_slots=set(self.spatial_slots),
+            sampler=self.sampler.snapshot(),
+            prior_sampler=None if self.prior_sampler is None
+            else self.prior_sampler.snapshot(),
+            spatial_sampler=None if self.spatial_sampler is None
+            else self.spatial_sampler.snapshot(),
+            cache=cache_leaves,
+        )
+
+    @classmethod
+    def restore(cls, state: dict, params: Any = None,
+                cfg: ModelConfig | None = None) -> "ServeEngine":
+        """Rebuild an engine from :meth:`snapshot` output. A model-backed
+        snapshot needs the (unsnapshotted) ``params``/``cfg`` passed back;
+        pool handles stay valid because the pool snapshot carries its
+        version counters."""
+        if state.get("kind") != "serve_engine":
+            raise ValueError(f"not a ServeEngine snapshot: {state.get('kind')!r}")
+        if state["has_model"] and params is None:
+            raise ValueError("snapshot was model-backed: pass params and cfg")
+        eng = cls(params if state["has_model"] else None, cfg,
+                  n_slots=int(state["n_slots"]), max_seq=int(state["max_seq"]),
+                  on_fault=state.get("on_fault", "raise"))
+        eng.steps = int(state["steps"])
+        eng.pos = np.asarray(state["pos"], np.int32).copy()
+        eng.last_tok = np.asarray(state["last_tok"], np.int32).copy()
+        eng.queue = deque(cls._req_restore(d) for d in state["queue"])
+        eng.slots = [cls._req_restore(d) for d in state["slots"]]
+        from repro.pool import Handle  # lazy: keeps import edges thin
+
+        eng.prior_handles = {
+            int(s): Handle(int(h[0]), int(h[1]), int(h[2]), int(h[3]), h[4])
+            for s, h in state["prior_handles"].items()
+        }
+        eng.spatial_slots = {int(s) for s in state["spatial_slots"]}
+        eng.sampler = TokenSampler.restore(state["sampler"])
+        if state["prior_sampler"] is not None:
+            eng.prior_sampler = PooledForestSampler.restore(
+                state["prior_sampler"]
+            )
+        if state["spatial_sampler"] is not None:
+            eng.spatial_sampler = SpatialSampler.restore(
+                state["spatial_sampler"]
+            )
+        if state["cache"] is not None and eng.cache is not None:
+            treedef = jax.tree_util.tree_structure(eng.cache)
+            eng.cache = jax.tree_util.tree_unflatten(
+                treedef, [jnp.asarray(x) for x in state["cache"]]
+            )
+        return eng

@@ -75,6 +75,21 @@ class QmcStreams:
         np.add.at(self.counters, slots, 1)
         return xi
 
+    def snapshot(self) -> dict:
+        """Exact stream state (offset bits + counters): restoring it makes
+        every subsequent draw bit-identical to an uninterrupted stream."""
+        return dict(kind="qmc_streams",
+                    offset_bits=self.offset_bits.copy(),
+                    counters=self.counters.copy())
+
+    @classmethod
+    def restore(cls, state: dict) -> "QmcStreams":
+        s = cls.__new__(cls)
+        s.offset_bits = np.asarray(state["offset_bits"], np.uint32).copy()
+        s.offsets = s.offset_bits.astype(np.float32) * QMC_SCALE
+        s.counters = np.asarray(state["counters"], np.uint32).copy()
+        return s
+
 
 def _occurrence_rank_np(slots: np.ndarray) -> np.ndarray:
     """Per-occurrence rank of each slot within one drain (call order): the
@@ -166,6 +181,18 @@ class DeviceQmcStreams:
             slots = np.arange(self.n_slots)
         return np.asarray(self.draw(slots)[2])
 
+    def snapshot(self) -> dict:
+        return dict(kind="device_qmc_streams",
+                    offset_bits=np.asarray(self.offset_bits),
+                    counters=np.asarray(self.counters))
+
+    @classmethod
+    def restore(cls, state: dict) -> "DeviceQmcStreams":
+        s = cls.__new__(cls)
+        s.offset_bits = jnp.asarray(np.asarray(state["offset_bits"], np.uint32))
+        s.counters = jnp.asarray(np.asarray(state["counters"], np.uint32))
+        return s
+
 
 class Qmc2Streams:
     """Per-slot 2-D low-discrepancy streams: the host oracle of the 2-D
@@ -196,6 +223,20 @@ class Qmc2Streams:
         u, v = qmc2_point_np(ctr, self.offset_u[slots], self.offset_v[slots])
         np.add.at(self.counters, slots, 1)
         return u, v
+
+    def snapshot(self) -> dict:
+        return dict(kind="qmc2_streams",
+                    offset_u=self.offset_u.copy(),
+                    offset_v=self.offset_v.copy(),
+                    counters=self.counters.copy())
+
+    @classmethod
+    def restore(cls, state: dict) -> "Qmc2Streams":
+        s = cls.__new__(cls)
+        s.offset_u = np.asarray(state["offset_u"], np.uint32).copy()
+        s.offset_v = np.asarray(state["offset_v"], np.uint32).copy()
+        s.counters = np.asarray(state["counters"], np.uint32).copy()
+        return s
 
 
 @jax.jit
@@ -260,6 +301,48 @@ class DeviceQmc2Streams:
         u, v = self.draw(slots)
         return np.asarray(u), np.asarray(v)
 
+    def snapshot(self) -> dict:
+        return dict(kind="device_qmc2_streams",
+                    offset_u=np.asarray(self.offset_u),
+                    offset_v=np.asarray(self.offset_v),
+                    counters=np.asarray(self.counters))
+
+    @classmethod
+    def restore(cls, state: dict) -> "DeviceQmc2Streams":
+        s = cls.__new__(cls)
+        s.offset_u = jnp.asarray(np.asarray(state["offset_u"], np.uint32))
+        s.offset_v = jnp.asarray(np.asarray(state["offset_v"], np.uint32))
+        s.counters = jnp.asarray(np.asarray(state["counters"], np.uint32))
+        return s
+
+
+_STREAM_KINDS = {
+    "qmc_streams": "QmcStreams",
+    "device_qmc_streams": "DeviceQmcStreams",
+    "qmc2_streams": "Qmc2Streams",
+    "device_qmc2_streams": "DeviceQmc2Streams",
+}
+
+
+def restore_streams(state: dict):
+    """Dispatch a stream snapshot back to its class by ``kind``."""
+    if state is None:
+        return None
+    cls = globals()[_STREAM_KINDS[state["kind"]]]
+    return cls.restore(state)
+
+
+def _rng_state(rng):
+    return None if rng is None else rng.bit_generator.state
+
+
+def _rng_restore(state):
+    if state is None:
+        return None
+    rng = np.random.default_rng()
+    rng.bit_generator.state = state
+    return rng
+
 
 class SpatialSampler:
     """2-D serving sampler: ONE shared environment/density map
@@ -319,6 +402,37 @@ class SpatialSampler:
         """Patch dirty map rows in place (O(dirty rows); see
         :meth:`repro.spatial.Map2DSampler.update_map`)."""
         return self.map.update_map(delta_rows, delta=delta)
+
+    def snapshot(self) -> dict:
+        """Map rows + build config + exact stream state. Restore rebuilds
+        the map deterministically (bit-identical arrays) and resumes the
+        streams where they stopped; sharded maps restore single-device
+        (the dist conformance suite pins build bit-identity across that)."""
+        m = self.map
+        return dict(
+            kind="spatial_sampler",
+            rows=[np.asarray(r, np.float64) for r in m.rows_raw],
+            map_kwargs=dict(
+                m_marginal=m.m_marginal, min_class=m.min_class,
+                fallback_slack=m.fallback_slack, coalesce=m.coalesce,
+                use_pallas=m.use_pallas, policy=m.policy,
+            ),
+            stream_kind=self.stream_kind,
+            device_streams=self.device_streams,
+            streams=None if self.streams is None else self.streams.snapshot(),
+            rng=_rng_state(self.rng),
+        )
+
+    @classmethod
+    def restore(cls, state: dict) -> "SpatialSampler":
+        if state.get("kind") != "spatial_sampler":
+            raise ValueError(f"not a SpatialSampler snapshot: {state.get('kind')!r}")
+        img = np.stack([np.asarray(r, np.float64) for r in state["rows"]])
+        s = cls(img, n_slots=1, streams=state["stream_kind"],
+                device_streams=state["device_streams"], **state["map_kwargs"])
+        s.streams = restore_streams(state["streams"])
+        s.rng = _rng_restore(state["rng"])
+        return s
 
 
 class ForestSampler:
@@ -418,12 +532,13 @@ class PooledForestSampler:
 
     def __init__(self, n_slots: int = 64, seed: int = 0, min_class: int = 8,
                  m: int | None = None, use_pallas: bool = True,
-                 device_streams: bool = True, streams: str = "qmc"):
+                 device_streams: bool = True, streams: str = "qmc",
+                 policy: str = "reject"):
         from repro.pool import ForestPool  # lazy: serve stays importable
 
         if streams not in ("qmc", "prng"):
             raise ValueError(f"streams must be 'qmc' or 'prng', got {streams!r}")
-        self.pool = ForestPool(min_class=min_class, m=m)
+        self.pool = ForestPool(min_class=min_class, m=m, policy=policy)
         self.stream_kind = streams
         self.device_streams = device_streams and streams == "qmc"
         if streams == "qmc":
@@ -483,6 +598,35 @@ class PooledForestSampler:
         xi = self.streams.next(np.asarray(slots))
         return self.pool.sample(handles, xi, use_pallas=self.use_pallas)
 
+    def snapshot(self) -> dict:
+        """Pool arenas + exact stream/PRNG state — everything a resumed
+        process needs for bit-identical subsequent drains."""
+        return dict(
+            kind="pooled_forest_sampler",
+            pool=self.pool.snapshot(),
+            stream_kind=self.stream_kind,
+            device_streams=self.device_streams,
+            streams=None if self.streams is None else self.streams.snapshot(),
+            rng=_rng_state(self.rng),
+            use_pallas=self.use_pallas,
+        )
+
+    @classmethod
+    def restore(cls, state: dict) -> "PooledForestSampler":
+        from repro.pool import ForestPool  # lazy: serve stays importable
+
+        if state.get("kind") != "pooled_forest_sampler":
+            raise ValueError(
+                f"not a PooledForestSampler snapshot: {state.get('kind')!r}"
+            )
+        s = cls(n_slots=1, streams=state["stream_kind"],
+                device_streams=state["device_streams"],
+                use_pallas=state["use_pallas"])
+        s.pool = ForestPool.restore(state["pool"])
+        s.streams = restore_streams(state["streams"])
+        s.rng = _rng_restore(state["rng"])
+        return s
+
 
 class TokenSampler:
     def __init__(self, mode: str = "inverse_qmc", n_slots: int = 64,
@@ -518,3 +662,21 @@ class TokenSampler:
         )
         idx = ops.sample_rows(cdf, jnp.asarray(xi)[:, None], use_pallas=self.use_pallas)
         return np.asarray(idx)[:, 0]
+
+    def snapshot(self) -> dict:
+        return dict(
+            kind="token_sampler", mode=self.mode,
+            temperature=self.temperature, use_pallas=self.use_pallas,
+            streams=self.streams.snapshot(), rng=_rng_state(self.rng),
+        )
+
+    @classmethod
+    def restore(cls, state: dict) -> "TokenSampler":
+        if state.get("kind") != "token_sampler":
+            raise ValueError(f"not a TokenSampler snapshot: {state.get('kind')!r}")
+        s = cls(mode=state["mode"], n_slots=1,
+                temperature=state["temperature"],
+                use_pallas=state["use_pallas"])
+        s.streams = restore_streams(state["streams"])
+        s.rng = _rng_restore(state["rng"])
+        return s

@@ -58,6 +58,7 @@ from repro.core.forest2d import build_forest_rows
 from repro.kernels import ops, ref
 from repro.kernels.forest_sample import forest_sample as _forest_sample_kernel
 from repro.pool.arena import _pow2_at_least
+from repro.robust.validate import check_policy, sanitize_weights
 from repro.pool.batched import BatchedForest, batched_from_row_forest
 
 
@@ -142,23 +143,32 @@ class Map2DSampler:
     mirror that module); conditionals stay in stacked class arenas either
     way — they are many *small* trees, exactly the shape the batched kernel
     serves best. ``use_pallas`` defaults to the repo-wide dispatch policy.
+
+    ``policy`` is the per-map weight-admission policy (``reject`` |
+    ``clamp`` | ``quarantine`` | ``off``, see :mod:`repro.robust`): each
+    row classifies against the structured taxonomy — non-finite or
+    negative entries raise under ``reject`` (NaN rows previously slipped
+    through to opaque downstream errors) and are repaired / replaced by
+    the uniform placeholder under ``clamp``/``quarantine``. All-zero rows
+    are NOT violations here: a zero-mass row is exactly unselectable by
+    the marginal, the map's long-standing semantics.
     """
 
     def __init__(self, img, *, m_marginal: int | None = None,
                  min_class: int = 8, sharded: bool = False, mesh=None,
                  rebalance: bool = False, routed: bool = True,
                  use_pallas: bool | None = None, coalesce: bool = True,
-                 fallback_slack: int = 2):
+                 fallback_slack: int = 2, policy: str = "reject"):
         if min_class < 1 or (min_class & (min_class - 1)):
             raise ValueError("min_class must be a positive power of two")
+        self.policy = check_policy(policy)
         rows = [np.asarray(r, np.float64) for r in img]
         if not rows:
             raise ValueError("map must have at least one row")
-        for r, w in enumerate(rows):
-            if w.ndim != 1 or w.shape[0] < 1:
-                raise ValueError(f"row {r} must be a 1-D non-empty array")
-            if (w < 0).any():
-                raise ValueError(f"row {r} has negative weights")
+        rows = [
+            sanitize_weights(w, policy, allow_zero_total=True)[0]
+            for w in rows
+        ]
         self.rows_raw = rows
         self.H = len(rows)
         self.widths = np.asarray([len(w) for w in rows], np.int64)
@@ -342,8 +352,9 @@ class Map2DSampler:
                     f"{int(self.widths[r])}, got shape {w.shape}"
                 )
             raw = self.rows_raw[r] + w if delta else w
-            if (raw < 0).any():
-                raise ValueError(f"row {r} update yields negative weights")
+            # same admission policy as construction (reject raises the
+            # structured class before any map state moves)
+            raw = sanitize_weights(raw, self.policy, allow_zero_total=True)[0]
             self.rows_raw[r] = raw
             self.row_mass[r] = raw.sum()
             by_class.setdefault(int(self._class_of[r]), []).append(r)
@@ -423,6 +434,7 @@ class Map2DSampler:
             H=self.H,
             m_marginal=self.m_marginal,
             sharded=self.sharded,
+            policy=self.policy,
             classes={
                 wc: dict(rows=len(c.row_ids), rebuilds=c.rebuilds,
                          skips=c.skips, degenerate=c.degenerate)

@@ -93,6 +93,23 @@ def test_pool_sampling_bench_runs():
     assert all(r["us"] > 0 and r["classes"] >= 1 for r in rows)
 
 
+def test_pool_guard_bench_runs():
+    from benchmarks.pool import run_sampling_guard
+
+    rows = run_sampling_guard(tenants=8, draws=1 << 10)
+    assert {r["guard"] for r in rows} == {"on", "off"}
+    assert all(r["us"] > 0 for r in rows)
+
+
+def test_pool_snapshot_bench_runs():
+    from benchmarks.pool import run_snapshot
+
+    rows = run_snapshot(tenant_counts=(8,))
+    assert rows[0]["tenants"] == 8
+    assert all(rows[0][k] > 0
+               for k in ("snapshot_us", "save_us", "restore_us"))
+
+
 def test_throughput_sharded_bench_runs():
     from benchmarks.sampling_throughput import run_sharded
 

@@ -70,6 +70,40 @@ def test_keep_last_k(tmp_path):
     assert steps == ["step_00000003", "step_00000004"]
 
 
+def test_async_save_worker_failure_surfaces(tmp_path, monkeypatch):
+    """An async checkpoint writer that dies (disk full, permissions) must
+    NOT fail silently: the exception is re-raised on the next save()/wait()
+    — a training loop can't run for hours believing checkpoints exist."""
+    import repro.ckpt.checkpoint as ck
+
+    mgr = ck.CheckpointManager(tmp_path, async_save=True)
+    tree = {"x": jnp.zeros(3)}
+    mgr.save(tree, 1)
+    mgr.wait()  # healthy write: no error
+    assert latest_step(tmp_path) == 1
+
+    real_save = ck.save
+
+    def boom(root, t, step):
+        raise OSError("injected: no space left on device")
+
+    monkeypatch.setattr(ck, "save", boom)
+    mgr.save(tree, 2)  # worker fails in the background
+    with pytest.raises(RuntimeError, match="async checkpoint save failed"):
+        mgr.wait()
+    # ...and the pending error also surfaces through the next save()
+    monkeypatch.setattr(ck, "save", boom)
+    mgr.save(tree, 3)
+    monkeypatch.setattr(ck, "save", real_save)
+    with pytest.raises(RuntimeError, match="async checkpoint save failed"):
+        mgr.save(tree, 4)
+    # the failed steps never became visible checkpoints
+    assert latest_step(tmp_path) == 1
+    mgr.save(tree, 5)  # recovered: the error was consumed, not sticky
+    mgr.wait()
+    assert latest_step(tmp_path) == 5
+
+
 def test_loss_decreases(tmp_path):
     cfg = _tiny_cfg()
     oc = AdamWConfig(lr=2e-3, total_steps=40, warmup_steps=4)

@@ -39,6 +39,11 @@ def test_module_list_is_nonempty():
     )
     # ...and so is the 2-D map serving subsystem
     assert {"repro.spatial", "repro.spatial.map2d"} <= set(MODULES)
+    # ...and the serving-robustness layer
+    assert {
+        "repro.robust", "repro.robust.errors", "repro.robust.validate",
+        "repro.robust.verify", "repro.robust.faults", "repro.robust.snapshot",
+    } <= set(MODULES)
 
 
 @pytest.mark.parametrize("mod", MODULES)

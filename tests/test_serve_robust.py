@@ -1,0 +1,754 @@
+"""Serving-robustness conformance suite.
+
+The contract under test (``repro.robust`` + its pool/serve/dist hooks):
+
+- **Validated admission** — every malformed weight row is rejected at the
+  pool / spatial-map / engine boundary with the structured taxonomy
+  (``non_finite`` / ``negative`` / ``zero_total`` / ``overflow_on_pad`` /
+  ``bad_dtype`` / ``bad_shape``), or repaired/flagged under the lenient
+  ``clamp`` / ``quarantine`` policies — never admitted silently and never
+  surfaced as a mid-drain crash.
+- **Isolation** — an adversarial tenant can never corrupt a co-tenant:
+  after any fault the co-tenant's drains stay **bit-identical** to a pool
+  that never saw the bad input, and ``verify_pool`` stays clean.
+- **Snapshot/restore** — ``save_serving``/``load_serving`` round-trips the
+  pool arenas, all four QMC stream classes, and the engine's slot state;
+  a killed process (``os._exit``, subprocess matrix below) resumes with
+  bit-identical subsequent drains and stream counters.
+- **Degraded mode** — a sharded forest sampled on a shrunk mesh with
+  ``on_mismatch="degrade"`` falls back to gathered single-device descent,
+  elementwise-identical, with ``degraded=True`` in its stats.
+
+The fuzz lane runs under real Hypothesis when installed, else the
+deterministic stub in ``tests/_stubs`` (same keyword-strategy API).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import hypothesis
+import hypothesis.strategies as st
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.ckpt import latest_step, load_state, save_state
+from repro.pool import ForestPool, Handle
+from repro.robust import (
+    NegativeWeightError,
+    NonFiniteWeightError,
+    OverflowOnPadError,
+    QuarantinedError,
+    RequestError,
+    ServingError,
+    StaleHandleError,
+    WeightDtypeError,
+    WeightShapeError,
+    ZeroTotalError,
+    load_serving,
+    save_serving,
+    verify_pool,
+)
+from repro.serve import (
+    DeviceQmc2Streams,
+    DeviceQmcStreams,
+    PooledForestSampler,
+    Qmc2Streams,
+    QmcStreams,
+    Request,
+    ServeEngine,
+)
+from repro.serve.sampler import restore_streams
+
+_ENV = dict(os.environ, PYTHONPATH="src")
+
+_BAD = {
+    "nan": lambda n: np.where(np.arange(n) == n // 2, np.nan, 1.0),
+    "inf": lambda n: np.where(np.arange(n) == 0, np.inf, 1.0),
+    "neg": lambda n: np.where(np.arange(n) == n - 1, -1.0, 2.0),
+    "zero": lambda n: np.zeros(n),
+}
+
+
+# ------------------------------------------------------------ admission
+
+
+def test_admission_taxonomy_pool_insert():
+    """Every violation class raises its structured error (all ValueError
+    subclasses) from insert, under the default reject policy, and the
+    rejected row leaves no trace in the pool."""
+    pool = ForestPool()
+    cases = [
+        (_BAD["nan"](6), NonFiniteWeightError, "non_finite"),
+        (_BAD["inf"](6), NonFiniteWeightError, "non_finite"),
+        (_BAD["neg"](6), NegativeWeightError, "negative"),
+        (_BAD["zero"](6), ZeroTotalError, "zero_total"),
+        (np.full(4, 1e308), OverflowOnPadError, "overflow_on_pad"),
+        (np.ones((2, 3)), WeightShapeError, "bad_shape"),
+        (np.ones(0), WeightShapeError, "bad_shape"),
+        (np.asarray(["a", "b"]), WeightDtypeError, "bad_dtype"),
+    ]
+    for method in ("forest", "alias"):
+        for w, err, code in cases:
+            with pytest.raises(err) as ei:
+                pool.insert(w, method=method)
+            assert ei.value.code == code
+            assert isinstance(ei.value, ValueError)
+    assert pool.stats()["tenants"] == 0
+    assert verify_pool(pool) == []
+
+
+def test_admission_taxonomy_pool_update_leaves_state_untouched():
+    """A rejected update (direct or via delta) must leave the tenant
+    serving exactly its previous distribution."""
+    rng = np.random.default_rng(0)
+    pool = ForestPool()
+    h = pool.insert(rng.random(9) + 1e-3)
+    before = pool.weights(h).copy()
+    xi = rng.random(16).astype(np.float32)
+    drains = pool.sample([h] * 16, xi)
+    for w, err in [
+        (_BAD["nan"](9), NonFiniteWeightError),
+        (_BAD["neg"](9), NegativeWeightError),
+        (_BAD["zero"](9), ZeroTotalError),
+    ]:
+        with pytest.raises(err):
+            pool.update_weights(h, w)
+    # a delta that drives an entry negative is the same violation
+    with pytest.raises(NegativeWeightError):
+        pool.update_weights(h, delta=-10.0 * np.ones(9))
+    np.testing.assert_array_equal(pool.weights(h), before)
+    np.testing.assert_array_equal(pool.sample([h] * 16, xi), drains)
+    assert verify_pool(pool) == []
+
+
+def test_negative_entries_with_positive_sum_regression():
+    """Regression (pre-taxonomy bug): a row like [2, -1, 2] has a positive
+    total, so it used to sail through the admission check and build a
+    clipped/cummaxed CDF silently biased toward index 0. It must now be a
+    structured ``negative`` rejection at EVERY admission surface."""
+    bad = np.asarray([2.0, -1.0, 2.0])
+    pool = ForestPool()
+    for method in ("forest", "alias"):
+        with pytest.raises(NegativeWeightError):
+            pool.insert(bad, method=method)
+    h = pool.insert(np.ones(3))
+    with pytest.raises(NegativeWeightError):
+        pool.update_weights(h, bad)
+
+    from repro.spatial import Map2DSampler
+
+    with pytest.raises(NegativeWeightError):
+        Map2DSampler(np.stack([bad, np.ones(3)]))
+    m = Map2DSampler(np.ones((2, 3)))
+    with pytest.raises(NegativeWeightError):
+        m.update_map({0: bad})
+
+    eng = ServeEngine(None, None, n_slots=2)
+    with pytest.raises(RequestError, match="negative"):
+        eng.submit(Request(rid=0, prompt=np.zeros(0, np.int32), prior=bad))
+
+
+def test_clamp_policy_repairs():
+    """clamp admits every value-violation by repair: NaN -> 0, +Inf ->
+    f32max, negatives -> 0, all-zero -> uniform; the repaired row is what
+    the tenant serves."""
+    pool = ForestPool(policy="clamp")
+    h = pool.insert(np.asarray([1.0, np.nan, 1.0]))
+    w = pool.weights(h)
+    assert np.isfinite(w).all() and w[1] == 0.0 and abs(w.sum() - 1.0) < 1e-6
+    h2 = pool.insert(np.asarray([2.0, -5.0, 2.0]))
+    assert pool.weights(h2)[1] == 0.0
+    h3 = pool.insert(np.zeros(4))
+    np.testing.assert_allclose(pool.weights(h3), np.full(4, 0.25), rtol=1e-6)
+    h4 = pool.insert(np.asarray([np.inf, 1.0]))
+    assert np.isfinite(pool.weights(h4)).all()
+    out = pool.sample([h, h2, h3, h4], np.asarray([0.1, 0.5, 0.9, 0.3], np.float32))
+    assert ((out >= 0) & (out < 4)).all()
+    # structural violations are never repaired, under any policy
+    with pytest.raises(WeightShapeError):
+        pool.insert(np.ones((2, 2)))
+    assert verify_pool(pool) == []
+
+
+def test_quarantine_policy_flags_and_clears():
+    pool = ForestPool(policy="quarantine")
+    good = pool.insert(np.asarray([3.0, 1.0]))
+    bad = pool.insert(_BAD["nan"](5))
+    assert pool.is_quarantined(bad) and not pool.is_quarantined(good)
+    assert pool.stats()["quarantined"] == 1
+    with pytest.raises(QuarantinedError):
+        pool.weights(bad)
+    # the placeholder still drains, in-range (serving never crashes)
+    out = pool.sample([bad] * 8, np.linspace(0, 0.99, 8).astype(np.float32))
+    assert ((out >= 0) & (out < 5)).all()
+    # a clean update clears the flag and serves the new row
+    pool.update_weights(bad, np.arange(1.0, 6.0))
+    assert not pool.is_quarantined(bad)
+    np.testing.assert_allclose(pool.weights(bad),
+                               np.arange(1.0, 6.0, dtype=np.float32) / 15.0,
+                               rtol=1e-6)
+    # a bad update re-quarantines; evict drops the flag
+    pool.update_weights(bad, _BAD["zero"](5))
+    assert pool.is_quarantined(bad) and pool.stats()["quarantined"] == 1
+    pool.evict(bad)
+    assert pool.stats()["quarantined"] == 0
+    assert verify_pool(pool) == []
+
+
+def test_stale_handle_is_structured():
+    pool = ForestPool()
+    h = pool.insert(np.ones(4))
+    pool.evict(h)
+    for op in (
+        lambda: pool.sample([h], np.asarray([0.5], np.float32)),
+        lambda: pool.update_weights(h, np.ones(4)),
+        lambda: pool.weights(h),
+        lambda: pool.evict(h),
+    ):
+        with pytest.raises(StaleHandleError) as ei:
+            op()
+        assert ei.value.code == "stale_handle"
+
+
+def test_guard_detects_corrupted_arena_rows():
+    """guard=True cross-checks each touched group's invariants before the
+    launch: a payload corrupted behind the pool's back (bit-flip, bad
+    restore) fails loudly instead of sampling garbage."""
+    pool = ForestPool()
+    hf = pool.insert(np.arange(1.0, 9.0), method="forest")
+    ha = pool.insert(np.arange(1.0, 9.0), method="alias")
+    xi = np.asarray([0.3, 0.7], np.float32)
+    out = pool.sample([hf, ha], xi, guard=True)  # clean pool passes
+    assert ((out >= 0) & (out < 8)).all()
+    sc = pool.classes[hf.size_class]
+    sc.forest = sc.forest._replace(
+        cdf=sc.forest.cdf.at[hf.row, 3].set(jnp.nan)
+    )
+    with pytest.raises(ValueError, match="guard: corrupted"):
+        pool.sample([hf], np.asarray([0.5], np.float32), guard=True)
+    ar = pool.alias_classes[ha.size_class]
+    ar.table = ar.table._replace(q=ar.table.q.at[ha.row, 0].set(2.0))
+    with pytest.raises(ValueError, match="guard: corrupted"):
+        pool.sample([ha], np.asarray([0.5], np.float32), guard=True)
+
+
+# ----------------------------------------------------- engine admission
+
+
+def test_engine_submit_validation():
+    eng = ServeEngine(None, None, n_slots=2)
+    z = np.zeros(0, np.int32)
+    with pytest.raises(RequestError):
+        eng.submit(Request(rid=0, prompt=z, prior=np.ones(4),
+                           prior2d=np.ones((2, 3))))
+    with pytest.raises(RequestError):  # no model, no prior
+        eng.submit(Request(rid=1, prompt=z))
+    with pytest.raises(RequestError, match="bad_dtype"):
+        eng.submit(Request(rid=2, prompt=z, prior=np.asarray(["x", "y"])))
+    with pytest.raises(RequestError, match="non_finite"):
+        eng.submit(Request(rid=3, prompt=z, prior=_BAD["nan"](6)))
+    with pytest.raises(RequestError, match="bad_shape"):
+        eng.submit(Request(rid=4, prompt=z, prior2d=[]))
+    with pytest.raises(RequestError, match="non_finite"):
+        eng.submit(Request(rid=5, prompt=z, prior2d=_BAD["inf"](6).reshape(2, 3)))
+    assert len(eng.queue) == 0
+    # lenient prior pool => value violations defer to admit-time repair
+    lenient = ServeEngine(
+        None, None, n_slots=2,
+        prior_sampler=PooledForestSampler(n_slots=2, policy="clamp"),
+    )
+    r = Request(rid=6, prompt=z, prior=_BAD["nan"](6), max_new=3)
+    lenient.submit(r)
+    lenient.run(max_steps=20)
+    assert r.done and r.error is None and len(r.out) == 3
+    # structural violations stay submit-time rejections even when lenient
+    with pytest.raises(RequestError, match="bad_shape"):
+        lenient.submit(Request(rid=7, prompt=z, prior=np.ones((2, 2))))
+
+
+def test_engine_retire_isolates_per_request_faults():
+    """on_fault="retire": a fault scoped to one request retires that
+    request with a structured ``error`` result; co-tenant slots keep
+    serving and finish normally."""
+    rng = np.random.default_rng(5)
+    eng = ServeEngine(None, None, n_slots=3, on_fault="retire")
+    reqs = [
+        Request(rid=i, prompt=np.zeros(0, np.int32), max_new=6,
+                prior=rng.random(10) + 1e-3)
+        for i in range(3)
+    ]
+    for r in reqs:
+        eng.submit(r)
+    eng.step()  # admit everyone
+    victim_slot, victim_handle = next(iter(eng.prior_handles.items()))
+    victim = eng.slots[victim_slot]
+    eng.prior_sampler.pool.evict(victim_handle)  # corruption: handle dies
+    eng.run(max_steps=40)
+    assert victim.done and victim.error is not None
+    assert victim.error.startswith("stale_handle")
+    for r in reqs:
+        if r is victim:
+            continue
+        assert r.done and r.error is None and len(r.out) == 6
+    assert verify_pool(eng.prior_sampler.pool) == []
+
+
+def test_engine_retire_isolates_mismatched_map():
+    """Same-shape different-content prior2d passes submit (content is only
+    checkable against the admitted shared map); under retire it fails at
+    admit as a per-request error while the matching request serves."""
+    img = np.random.default_rng(0).random((4, 8)) + 1e-3
+    other = img.copy()
+    other[0, 0] += 1.0
+    eng = ServeEngine(None, None, n_slots=2, on_fault="retire")
+    a = Request(rid=0, prompt=np.zeros(0, np.int32), prior2d=img, max_new=4)
+    b = Request(rid=1, prompt=np.zeros(0, np.int32), prior2d=other, max_new=4)
+    eng.submit(a)
+    eng.submit(b)
+    eng.run(max_steps=30)
+    assert a.done and a.error is None and len(a.out) == 4
+    assert b.done and b.error is not None
+
+
+# ---------------------------------------------------- co-tenant isolation
+
+
+def test_cotenant_drains_bit_identical_after_faults():
+    """Twin-pool oracle, by hand: a chaos pool absorbs a stream of faults
+    under quarantine; its co-tenants' drains must stay bit-identical to a
+    clean pool that never saw any of it."""
+    rng = np.random.default_rng(11)
+    weights = [rng.random(n) + 1e-3 for n in (5, 12, 30)]
+    methods = ["forest", "alias", "forest"]
+    chaos = ForestPool(policy="quarantine")
+    clean = ForestPool(policy="quarantine")
+    ch = chaos.insert_many(weights, method=methods)
+    cl = clean.insert_many(weights, method=methods)
+    for flavor in ("nan", "inf", "neg", "zero"):
+        chaos.insert(_BAD[flavor](7))           # quarantined placeholder
+        tmp = chaos.insert(rng.random(6) + 1e-3)
+        chaos.evict(tmp)
+        with pytest.raises(StaleHandleError):
+            chaos.sample([tmp], np.asarray([0.5], np.float32))
+        xi = rng.random(9).astype(np.float32)
+        got = chaos.sample([ch[i % 3] for i in range(9)], xi)
+        want = clean.sample([cl[i % 3] for i in range(9)], xi)
+        np.testing.assert_array_equal(got, want)
+        assert verify_pool(chaos) == []
+
+
+def test_chaos_harness_contract():
+    from repro.robust.faults import FaultPlan, run_chaos
+
+    plan = FaultPlan.default(steps=16, seed=2)
+    assert plan.faults  # the schedule actually injects something
+    for policy in ("quarantine", "reject"):
+        report = run_chaos(plan, steps=16, policy=policy, seed=2)
+        assert report["drains_equal"], policy
+        assert report["verify_errors"] == [], policy
+        assert report["injected"] == len(plan.faults)
+    # under reject every weight fault must surface as a structured code
+    report = run_chaos(plan, steps=16, policy="reject", seed=2)
+    weight_faults = [c for c in report["caught"]
+                     if c[1] in ("bad_insert", "bad_update")]
+    assert weight_faults
+    for _, _, code in weight_faults:
+        assert code in ("non_finite", "negative", "zero_total",
+                        "overflow_on_pad")
+
+
+# ------------------------------------------------------ snapshot/restore
+
+
+def test_stream_snapshot_restore_all_kinds():
+    """All four stream classes: restore() is exact — subsequent draws and
+    counters are bit-identical to the uninterrupted original."""
+    slots = np.asarray([0, 2, 2, 5, 0])
+    for cls in (QmcStreams, DeviceQmcStreams):
+        s = cls(8, seed=7)
+        s.next(slots)
+        twin = restore_streams(s.snapshot())
+        assert type(twin) is cls
+        for _ in range(3):
+            a, b = s.next(slots), twin.next(slots)
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_array_equal(np.asarray(s.counters),
+                                      np.asarray(twin.counters))
+    for cls in (Qmc2Streams, DeviceQmc2Streams):
+        s = cls(8, seed=7)
+        s.next(slots)
+        twin = restore_streams(s.snapshot())
+        assert type(twin) is cls
+        for _ in range(3):
+            (u1, v1), (u2, v2) = s.next(slots), twin.next(slots)
+            np.testing.assert_array_equal(np.asarray(u1), np.asarray(u2))
+            np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+        np.testing.assert_array_equal(np.asarray(s.counters),
+                                      np.asarray(twin.counters))
+
+
+def _churn(pool, streams, hs, step, outs):
+    """One deterministic churn step: update a tenant, churn the last slot,
+    drain every live tenant through the slot streams."""
+    rng = np.random.default_rng(1000 + step)
+    t = int(rng.integers(len(hs)))
+    if hs[t] is not None:
+        pool.update_weights(hs[t], rng.random(hs[t].n) + 1e-3)
+    if step % 5 == 2 and hs[-1] is not None:
+        pool.evict(hs[-1])
+        hs[-1] = None
+    if step % 5 == 4 and hs[-1] is None:
+        hs[-1] = pool.insert(rng.random(7) + 1e-3)
+    live = [h for h in hs if h is not None]
+    slots = np.arange(2 * len(live)) % streams.n_slots
+    handles = [live[i % len(live)] for i in range(len(slots))]
+    outs.append(pool.sample_streams(handles, slots, streams))
+
+
+def _fresh_serving():
+    pool = ForestPool(policy="quarantine")
+    streams = DeviceQmcStreams(8, seed=3)
+    rng = np.random.default_rng(0)
+    hs = pool.insert_many(
+        [rng.random(n) + 1e-3 for n in (5, 9, 17, 33, 12, 7)],
+        method=["forest", "alias", "forest", "alias", "forest", "forest"],
+    )
+    pool.insert(_BAD["nan"](4))  # a quarantined tenant rides along
+    return pool, streams, hs
+
+
+def test_pool_snapshot_restore_bitwise_midchurn(tmp_path):
+    """Mid-churn snapshot through save_serving/load_serving: the restored
+    pool + streams replay the remaining schedule bit-identically to the
+    uninterrupted run (drains AND device counters), and the quarantine
+    set survives the round trip."""
+    K, N = 6, 14
+    pool, streams, hs = _fresh_serving()
+    ref = []
+    for step in range(N):
+        _churn(pool, streams, hs, step, ref)
+
+    pool, streams, hs = _fresh_serving()
+    outs = []
+    for step in range(K):
+        _churn(pool, streams, hs, step, outs)
+    save_serving(tmp_path, K, pool=pool, streams=streams,
+                 extra=dict(hs=[None if h is None else tuple(h) for h in hs]))
+    del pool, streams, hs
+
+    states, step = load_serving(tmp_path)
+    assert step == K
+    pool = ForestPool.restore(states["pool"])
+    streams = restore_streams(states["streams"])
+    hs = [None if h is None else Handle(h[0], h[1], h[2], h[3], h[4])
+          for h in states["extra"]["hs"]]
+    assert verify_pool(pool) == []
+    assert pool.stats()["quarantined"] == 1
+    for step in range(K, N):
+        _churn(pool, streams, hs, step, outs)
+    assert len(outs) == len(ref)
+    for a, b in zip(outs, ref):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_engine_snapshot_restore_continuation(tmp_path):
+    """A prior-serving engine snapshotted mid-flight (live slots AND a
+    still-queued request) resumes through the file round-trip with
+    identical subsequent outputs."""
+    rng = np.random.default_rng(9)
+    eng = ServeEngine(None, None, n_slots=2, on_fault="retire")
+    reqs = [
+        Request(rid=i, prompt=np.zeros(0, np.int32), max_new=8,
+                prior=rng.random(6 + i) + 1e-3)
+        for i in range(4)
+    ]
+    for r in reqs:
+        eng.submit(r)
+    for _ in range(3):
+        eng.step()
+    save_serving(tmp_path, eng.steps, engine=eng)
+    states, _ = load_serving(tmp_path)
+    twin = ServeEngine.restore(states["engine"])
+    # restored Request objects are copies: grab them before stepping
+    twin_reqs = {r.rid: r for r in
+                 [s for s in twin.slots if s is not None] + list(twin.queue)}
+    assert set(twin_reqs) == {r.rid for r in reqs if not r.done}
+    for _ in range(40):
+        eng.step()
+        twin.step()
+        if all(r.done for r in reqs) and all(r.done for r in twin_reqs.values()):
+            break
+    live = {r.rid: r for r in reqs}
+    for rid, r in twin_reqs.items():
+        assert r.done and r.error is None
+        assert live[rid].done and live[rid].error is None
+        # tokens emitted before the snapshot live only in the original's
+        # out list; everything from the snapshot on must match exactly
+        k = len(live[rid].out) - len(r.out)
+        assert 0 <= k
+        np.testing.assert_array_equal(r.out, live[rid].out[k:])
+
+
+def test_save_state_codec_roundtrip(tmp_path):
+    """The tagged-JSON state codec: arrays (dtype-exact), tuples, sets,
+    int-keyed dicts, None, bools, big ints all round-trip; state blobs and
+    pytree checkpoints refuse to masquerade as each other."""
+    blob = dict(
+        a=np.arange(5, dtype=np.uint32),
+        b=np.asarray([1.5, np.pi], np.float32),
+        t=(1, "x", (2.5, None)),
+        s={("forest", 8, 0, 1), ("alias", 16, 2, 3)},
+        d={0: "zero", 7: np.ones(2), "k": True},
+        n=None,
+        big=2**80,
+    )
+    save_state(tmp_path, blob, 3)
+    save_state(tmp_path, blob, 5)
+    assert latest_step(tmp_path) == 5
+    got, step = load_state(tmp_path)
+    assert step == 5
+    np.testing.assert_array_equal(got["a"], blob["a"])
+    assert got["a"].dtype == np.uint32
+    np.testing.assert_array_equal(got["b"], blob["b"])
+    assert got["b"].dtype == np.float32
+    assert got["t"] == blob["t"] and isinstance(got["t"], tuple)
+    assert got["s"] == blob["s"] and isinstance(got["s"], set)
+    assert set(got["d"]) == {0, 7, "k"} and got["d"][0] == "zero"
+    np.testing.assert_array_equal(got["d"][7], np.ones(2))
+    assert got["n"] is None and got["big"] == 2**80
+
+    from repro.ckpt import save
+
+    save(tmp_path / "tree", {"w": jnp.ones(3)}, 1)
+    with pytest.raises(ValueError, match="pytree checkpoint"):
+        load_state(tmp_path / "tree")
+
+
+# ------------------------------------------------------------- fuzz lane
+
+
+@hypothesis.settings(max_examples=20, deadline=None)
+@hypothesis.given(
+    n=st.integers(min_value=1, max_value=33),
+    flavor=st.sampled_from(["nan", "inf", "neg", "zero", "denormal", "good"]),
+    policy=st.sampled_from(["reject", "clamp", "quarantine"]),
+    method=st.sampled_from(["forest", "alias"]),
+    scale=st.floats(min_value=1e-30, max_value=1e30),
+)
+def test_fuzz_admission_never_crashes_or_corrupts(n, flavor, policy, method,
+                                                  scale):
+    """Property: for ANY weight row, admission either returns a live
+    handle or raises a structured ServingError; the co-tenant's drains are
+    bit-identical to a pool that never saw the row; verify_pool is clean."""
+    rng = np.random.default_rng(n * 7 + len(flavor))
+    base = rng.random(9) + 1e-3
+    pool = ForestPool(policy=policy)
+    clean = ForestPool(policy=policy)
+    h = pool.insert(base)
+    hc = clean.insert(base)
+    xi = rng.random(8).astype(np.float32)
+    if flavor == "good":
+        w = (rng.random(n) + 1e-3) * scale
+    elif flavor == "denormal":
+        w = np.full(n, 5e-324)
+    else:
+        w = _BAD[flavor](n) * scale
+    try:
+        hb = pool.insert(w, method=method)
+        out = pool.sample([hb], np.asarray([0.5], np.float32))
+        assert 0 <= out[0] < n
+    except ServingError:
+        pass
+    np.testing.assert_array_equal(pool.sample([h] * 8, xi),
+                                  clean.sample([hc] * 8, xi))
+    assert verify_pool(pool) == []
+
+
+# ------------------------------------------------------- degraded mode
+
+
+def test_sample_sharded_stats_and_mismatch_validation():
+    import jax
+    from jax.sharding import Mesh
+
+    from repro.dist import forest as DF
+
+    mesh = Mesh(np.asarray(jax.devices()).reshape(-1), ("data",))
+    w = jnp.asarray(np.random.default_rng(0).random(32), jnp.float32)
+    sf = DF.build_forest_sharded(w, 8, mesh=mesh)
+    xi = jnp.asarray(np.random.default_rng(1).random(16), jnp.float32)
+    plain = np.asarray(DF.sample_sharded(sf, xi, mesh=mesh))
+    got, stats = DF.sample_sharded(sf, xi, mesh=mesh, with_stats=True)
+    np.testing.assert_array_equal(np.asarray(got), plain)
+    assert stats["degraded"] is False
+    with pytest.raises(ValueError):
+        DF.sample_sharded(sf, xi, mesh=mesh, on_mismatch="bogus")
+
+
+# --------------------------------------------------- subprocess matrices
+
+
+_KILL_RESUME_SCRIPT = r"""
+import os, sys
+import numpy as np
+from repro.pool import ForestPool, Handle
+from repro.robust import load_serving, save_serving, verify_pool
+from repro.serve.sampler import DeviceQmcStreams, restore_streams
+
+MODE, DIR = sys.argv[1], sys.argv[2]
+K, N = 6, 14
+BAD = np.where(np.arange(4) == 2, np.nan, 1.0)
+
+def fresh():
+    pool = ForestPool(policy="quarantine")
+    streams = DeviceQmcStreams(8, seed=3)
+    rng = np.random.default_rng(0)
+    hs = pool.insert_many(
+        [rng.random(n) + 1e-3 for n in (5, 9, 17, 33, 12, 7)],
+        method=["forest", "alias", "forest", "alias", "forest", "forest"])
+    pool.insert(BAD)
+    return pool, streams, hs
+
+def churn(pool, streams, hs, step, outs):
+    rng = np.random.default_rng(1000 + step)
+    t = int(rng.integers(len(hs)))
+    if hs[t] is not None:
+        pool.update_weights(hs[t], rng.random(hs[t].n) + 1e-3)
+    if step % 5 == 2 and hs[-1] is not None:
+        pool.evict(hs[-1]); hs[-1] = None
+    if step % 5 == 4 and hs[-1] is None:
+        hs[-1] = pool.insert(rng.random(7) + 1e-3)
+    live = [h for h in hs if h is not None]
+    slots = np.arange(2 * len(live)) % streams.n_slots
+    handles = [live[i % len(live)] for i in range(len(slots))]
+    outs.append(pool.sample_streams(handles, slots, streams))
+
+outs = []
+if MODE == "full":
+    pool, streams, hs = fresh()
+    for step in range(N):
+        churn(pool, streams, hs, step, outs)
+    outs = outs[K:]
+elif MODE == "part1":
+    pool, streams, hs = fresh()
+    for step in range(K):
+        churn(pool, streams, hs, step, outs)
+    save_serving(DIR, K, pool=pool, streams=streams,
+                 extra=dict(hs=[None if h is None else tuple(h) for h in hs]))
+    os._exit(17)  # kill: no cleanup, no atexit, nothing flushed after save
+elif MODE == "part2":
+    states, step = load_serving(DIR)
+    assert step == K
+    pool = ForestPool.restore(states["pool"])
+    streams = restore_streams(states["streams"])
+    hs = [None if h is None else Handle(h[0], h[1], h[2], h[3], h[4])
+          for h in states["extra"]["hs"]]
+    assert verify_pool(pool) == []
+    assert pool.stats()["quarantined"] == 1
+    for step in range(K, N):
+        churn(pool, streams, hs, step, outs)
+
+print("COUNTERS", ",".join(str(int(c)) for c in np.asarray(streams.counters)))
+for o in outs:
+    print("OUT", ",".join(str(int(v)) for v in o))
+"""
+
+
+@pytest.mark.slow
+def test_serving_kill_resume_bitwise_subprocess(tmp_path):
+    """The kill/resume matrix: a serving process killed with ``os._exit``
+    right after ``save_serving`` resumes in a fresh process and produces
+    bit-identical drains and final stream counters to a process that was
+    never killed."""
+    def run(mode, expect_rc=0):
+        p = subprocess.run(
+            [sys.executable, "-c", _KILL_RESUME_SCRIPT, mode, str(tmp_path)],
+            capture_output=True, text=True, env=_ENV, timeout=600,
+        )
+        assert p.returncode == expect_rc, (mode, p.stdout, p.stderr)
+        return p.stdout
+
+    full = run("full")
+    run("part1", expect_rc=17)
+    resumed = run("part2")
+    assert full == resumed
+    assert "OUT" in full and "COUNTERS" in full
+
+
+@pytest.mark.slow
+def test_mesh_shrink_degrades_to_gathered_descent_subprocess(tmp_path):
+    """A forest built for an 8-device mesh, served on a shrunk 2-device
+    mesh: on_mismatch="degrade" falls back to gathered single-device
+    descent — elementwise-identical to sample_forest on the gathered
+    forest, degraded=True in stats; the default still raises."""
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import Mesh
+        from repro.core import sample_forest
+        from repro.dist import forest as DF
+
+        full = Mesh(np.asarray(jax.devices()).reshape(-1), ("data",))
+        shrunk = Mesh(np.asarray(jax.devices()[:2]), ("data",))
+        w = jnp.asarray(np.random.default_rng(0).random(256), jnp.float32)
+        sf = DF.build_forest_sharded(w, 64, mesh=full)
+        xi = jnp.asarray(np.random.default_rng(1).random(128), jnp.float32)
+        try:
+            DF.sample_sharded(sf, xi, mesh=shrunk)
+            raise SystemExit("default on_mismatch must raise")
+        except ValueError:
+            pass
+        got, stats = DF.sample_sharded(
+            sf, xi, mesh=shrunk, on_mismatch="degrade", with_stats=True)
+        assert stats["degraded"] is True, stats
+        want = sample_forest(DF.gather_forest(sf), xi)
+        assert np.array_equal(np.asarray(got), np.asarray(want))
+        print("DEGRADE_OK")
+    """)
+    p = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                       text=True, env=_ENV, timeout=600)
+    assert p.returncode == 0, p.stderr
+    assert "DEGRADE_OK" in p.stdout
+
+
+@pytest.mark.slow
+def test_chaos_with_kill_resume_subprocess(tmp_path):
+    """Chaos + kill: the fault plan runs in a process that dies mid-plan
+    (kill_hook saves and _exits); a resumed chaos pool still passes
+    verify_pool and keeps draining in-range."""
+    script = textwrap.dedent("""
+        import os, sys
+        import numpy as np
+        from repro.pool import ForestPool
+        from repro.robust import load_serving, save_serving, verify_pool
+        from repro.robust.faults import Fault, FaultPlan, run_chaos
+
+        MODE, DIR = sys.argv[1], sys.argv[2]
+        if MODE == "crash":
+            plan = FaultPlan(tuple(
+                [Fault(step=s, kind="bad_update", flavor="inf")
+                 for s in (1, 3)] + [Fault(step=5, kind="kill")]))
+
+            def hook(step):
+                save_serving(DIR, step, marker=dict(step=step))
+                os._exit(23)
+
+            run_chaos(plan, steps=8, policy="quarantine", kill_hook=hook)
+            raise SystemExit("kill hook did not fire")
+        states, step = load_serving(DIR)
+        assert step == 5 and states["marker"]["step"] == 5
+        report = run_chaos(FaultPlan.default(steps=8, seed=4), steps=8,
+                           policy="quarantine", seed=4)
+        assert report["drains_equal"] and report["verify_errors"] == []
+        print("CHAOS_RESUME_OK")
+    """)
+    p = subprocess.run([sys.executable, "-c", script, "crash", str(tmp_path)],
+                       capture_output=True, text=True, env=_ENV, timeout=600)
+    assert p.returncode == 23, (p.stdout, p.stderr)
+    p = subprocess.run([sys.executable, "-c", script, "resume", str(tmp_path)],
+                       capture_output=True, text=True, env=_ENV, timeout=600)
+    assert p.returncode == 0, (p.stdout, p.stderr)
+    assert "CHAOS_RESUME_OK" in p.stdout
